@@ -1,0 +1,35 @@
+"""Benchmark entry point: one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
+CI/pytest smoke uses a smaller value for time).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig1_speed, pipeline_bench, table1_properties
+    n_chars = int(os.environ.get("REPRO_BENCH_CHARS", 4_300_000))
+    rows = []
+    print("name,us_per_call,derived")
+    for mod, kw in ((fig1_speed, {"n_chars": n_chars}),
+                    (table1_properties, {}),
+                    (pipeline_bench, {})):
+        for r in mod.run(**kw):
+            line = f"{r['name']},{r['us_per_call']:.1f},{r['derived']}"
+            rows.append(line)
+            print(line, flush=True)
+    # roofline summary (if dry-run artifacts exist)
+    try:
+        from repro.launch import roofline
+        for line in roofline.bench_rows():
+            print(line, flush=True)
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline_summary,0.0,skipped ({type(e).__name__})", flush=True)
+
+
+if __name__ == "__main__":
+    main()

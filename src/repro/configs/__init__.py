@@ -1,0 +1,1 @@
+"""Assigned-architecture configs + registry."""

@@ -1,0 +1,20 @@
+"""qwen1.5-0.5b [dense] — QKV bias, MHA (kv=16) [hf:Qwen/Qwen1.5-0.5B; hf].
+
+24L, d_model 1024, 16 heads kv=16, d_ff 2816, vocab 151936.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    n_layers=24,
+    d_model=1024,
+    vocab=151936,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    qkv_bias=True,
+    d_ff=2816,
+    unit=(LayerSpec("attn", "dense"),),
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+)

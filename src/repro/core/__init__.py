@@ -1,0 +1,28 @@
+"""Paper core: recursive n-gram hash families + independence machinery."""
+from repro.core.families import (
+    FAMILIES,
+    BufferedGeneral,
+    Cyclic,
+    General,
+    ID37,
+    ThreeWise,
+    init_h1,
+    make_family,
+)
+from repro.core.sketches import BloomFilter, CountMinSketch, HyperLogLog, MinHash, trailing_zeros
+
+__all__ = [
+    "FAMILIES",
+    "BufferedGeneral",
+    "Cyclic",
+    "General",
+    "ID37",
+    "ThreeWise",
+    "init_h1",
+    "make_family",
+    "BloomFilter",
+    "CountMinSketch",
+    "HyperLogLog",
+    "MinHash",
+    "trailing_zeros",
+]

@@ -1,0 +1,179 @@
+"""Exact and empirical independence checkers for n-gram hash families.
+
+The paper's claims (Props. 1–3, Lemmas 1/3, Theorem 1) are statements about
+probabilities over the random choice of the symbol hash ``h1``. For small
+``L`` and a small active alphabet these probabilities can be computed
+*exactly* by enumerating every possible ``h1`` table — ``(2^L)^slots``
+assignments — and counting joint hash values. That is what this module does;
+the tests then assert the paper's statements with zero statistical slack.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.families import ThreeWise, _Family
+
+Transform = Optional[Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def all_tables(L: int, slots: int) -> np.ndarray:
+    """Every possible assignment of ``slots`` i.i.d. uniform L-bit values.
+
+    Returns (A, slots) uint32 with A = (2^L)^slots. Keep L*slots <= ~24.
+    """
+    base = 1 << L
+    A = base ** slots
+    if A > (1 << 26):
+        raise ValueError(f"enumeration too large: {A} assignments")
+    idx = np.arange(A, dtype=np.uint64)
+    cols = [(idx // (base ** s)) % base for s in range(slots)]
+    return np.stack(cols, axis=1).astype(np.uint32)
+
+
+def _num_slots(family: _Family, sigma: int) -> int:
+    return family.n * sigma if isinstance(family, ThreeWise) else sigma
+
+
+def _params_from_row(family: _Family, row: jnp.ndarray, sigma: int):
+    if isinstance(family, ThreeWise):
+        return {"h1": row.reshape(family.n, sigma)}
+    return {"h1": row}
+
+
+def enumerate_hashes(family: _Family, ngrams: Sequence[Sequence[int]], sigma: int,
+                     transform: Transform = None) -> np.ndarray:
+    """Hash every n-gram under every possible h1 assignment.
+
+    Returns (A, k) uint32 — row a = hashes of the k n-grams under assignment a.
+    """
+    ngrams = np.asarray(ngrams, dtype=np.uint32)
+    assert ngrams.ndim == 2 and ngrams.shape[1] == family.n
+    assert ngrams.max(initial=0) < sigma
+    tables = jnp.asarray(all_tables(family.L, _num_slots(family, sigma)))
+
+    def one(row):
+        params = _params_from_row(family, row, sigma)
+        hs = jnp.stack([family.hash_ngram(params, g) for g in ngrams])
+        if transform is not None:
+            hs = transform(hs)
+        return hs
+
+    batched = jax.jit(jax.vmap(one))
+    # chunk to bound peak memory
+    outs = []
+    A = tables.shape[0]
+    step = 1 << 16
+    for s in range(0, A, step):
+        outs.append(np.asarray(batched(tables[s : s + step])))
+    return np.concatenate(outs, axis=0)
+
+
+def joint_counts(hashes: np.ndarray, bits: int) -> np.ndarray:
+    """(A, k) hash matrix -> exact joint histogram of shape (2^bits,)*k."""
+    A, k = hashes.shape
+    combined = np.zeros(A, dtype=np.uint64)
+    for j in range(k):
+        combined = (combined << np.uint64(bits)) | hashes[:, j].astype(np.uint64)
+    counts = np.bincount(combined, minlength=1 << (bits * k))
+    return counts.reshape((1 << bits,) * k)
+
+
+def is_uniform(family: _Family, ngram, sigma: int, transform: Transform = None,
+               bits: Optional[int] = None) -> bool:
+    """Exact check: P(h(x)=y) == 2^-bits for every y."""
+    bits = bits if bits is not None else family.L
+    hs = enumerate_hashes(family, [ngram], sigma, transform)
+    counts = joint_counts(hs, bits)
+    return bool((counts == hs.shape[0] // (1 << bits)).all())
+
+
+def is_kwise_independent(family: _Family, ngrams, sigma: int,
+                         transform: Transform = None,
+                         bits: Optional[int] = None) -> bool:
+    """Exact check of k-wise independence for the given distinct n-grams."""
+    bits = bits if bits is not None else family.L
+    k = len(ngrams)
+    hs = enumerate_hashes(family, ngrams, sigma, transform)
+    counts = joint_counts(hs, bits)
+    expected, rem = divmod(hs.shape[0], 1 << (bits * k))
+    if rem:  # probability 1/2^(k*bits) is not even representable -> fails
+        return False
+    return bool((counts == expected).all())
+
+
+def collision_probability(family: _Family, x1, x2, sigma: int,
+                          transform: Transform = None) -> float:
+    """Exact P(h(x1) == h(x2)) — 2-universality requires <= 2^-bits."""
+    hs = enumerate_hashes(family, [x1, x2], sigma, transform)
+    return float((hs[:, 0] == hs[:, 1]).mean())
+
+
+def trailing_zeros_np(v: np.ndarray, L: int) -> np.ndarray:
+    """zeros(x) of the paper §2: number of trailing zeros, zeros(0) = L."""
+    v = v.astype(np.uint64)
+    isolated = v & (~v + np.uint64(1))
+    out = np.zeros_like(v, dtype=np.int64)
+    mask = v == 0
+    tmp = isolated.copy()
+    # position of the isolated bit = its log2; vectorized via bit length loop
+    for b in range(L):
+        out = np.where((tmp >> np.uint64(b)) & np.uint64(1) == 1, b, out)
+    return np.where(mask, L, out)
+
+
+def is_kwise_trailing_zero_independent(family: _Family, ngrams, sigma: int,
+                                       transform: Transform = None,
+                                       bits: Optional[int] = None) -> bool:
+    """Exact check of the paper §2 definition:
+    P(AND_i zeros(h(x_i)) >= j_i) == 2^-sum(j_i) for all j in [0, L]^k."""
+    bits = bits if bits is not None else family.L
+    hs = enumerate_hashes(family, ngrams, sigma, transform)
+    A, k = hs.shape
+    tz = trailing_zeros_np(hs, bits)  # (A, k)
+    ranges = [np.arange(bits + 1) for _ in range(k)]
+    grids = np.meshgrid(*ranges, indexing="ij")
+    ok = True
+    for j_tuple in np.stack([g.ravel() for g in grids], axis=1):
+        sat = np.ones(A, dtype=bool)
+        for i, j in enumerate(j_tuple):
+            sat &= tz[:, i] >= j
+        expected = A / (2.0 ** int(j_tuple.sum()))
+        if sat.sum() != expected:
+            ok = False
+            break
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Empirical (sampled) checker for parameter regimes too large to enumerate
+# ---------------------------------------------------------------------------
+
+def empirical_joint_deviation(family: _Family, ngrams, sigma: int, *,
+                              samples: int, key, bits: Optional[int] = None,
+                              transform: Transform = None) -> float:
+    """Max |empirical P - 2^-k*bits| over the joint table, using ``samples``
+    random h1 draws. For calibration of large-L configurations."""
+    bits = bits if bits is not None else family.L
+    k = len(ngrams)
+    keys = jax.random.split(key, samples)
+    ngrams = jnp.asarray(np.asarray(ngrams, dtype=np.uint32))
+
+    def one(kk):
+        params = family.init(kk, sigma)
+        hs = jnp.stack([family.hash_ngram(params, g) for g in ngrams])
+        if transform is not None:
+            hs = transform(hs)
+        if bits * k > 32:
+            raise ValueError("empirical checker needs bits*k <= 32")
+        comb = jnp.zeros((), jnp.uint32)
+        for j in range(k):
+            comb = (comb << jnp.uint32(bits)) | hs[j].astype(jnp.uint32)
+        return comb
+
+    combined = np.asarray(jax.jit(jax.vmap(one))(keys))
+    counts = np.bincount(combined, minlength=1 << (bits * k))
+    return float(np.abs(counts / samples - 2.0 ** (-bits * k)).max())

@@ -1,0 +1,228 @@
+"""Probabilistic sketches built on the paper's hash families.
+
+These are the *consumers* of pairwise / trailing-zero independence inside the
+data pipeline:
+
+* :class:`HyperLogLog` — distinct-n-gram counting (the paper's §2 motivation:
+  requires trailing-zero independence, which recursive families provide at
+  the pairwise level).
+* :class:`BloomFilter` — train/eval decontamination membership. Uses two
+  independent family draws + Kirsch–Mitzenmacher double hashing (the analysis
+  of which needs exactly pairwise independence).
+* :class:`MinHash` — document-level near-dedup signatures over n-gram sets;
+  unbiased Jaccard estimation relies on (pairwise) independent permutations.
+* :class:`CountMinSketch` — heavy-hitter n-gram statistics; error bound is a
+  pairwise-independence argument.
+
+All update/query paths are pure ``jnp`` (jit/vmap/pjit-safe); state is a
+pytree so sketches can live inside training-step carries and be checkpointed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_U32 = jnp.uint32
+
+
+def trailing_zeros(v: jnp.ndarray, L: int = 32) -> jnp.ndarray:
+    """ctz(v) with ctz(0) = L (paper §2 'zeros'), branch-free:
+    popcount((v & -v) - 1)."""
+    v = v.astype(_U32)
+    isolated = v & (~v + np.uint32(1))
+    tz = jax.lax.population_count(isolated - np.uint32(1))
+    return jnp.minimum(tz, np.uint32(L)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# HyperLogLog
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperLogLog:
+    """Flajolet-style distinct counting from L-bit hash values.
+
+    ``b`` index bits -> m = 2^b registers; rank = trailing zeros of the
+    remaining bits + 1 (trailing-zero convention of the paper §2).
+    ``hash_bits`` must be the *usable* bits of the producing family — e.g.
+    ``Cyclic.out_bits`` after the Theorem-1 discard.
+    """
+
+    b: int = 10
+    hash_bits: int = 32
+
+    @property
+    def m(self) -> int:
+        return 1 << self.b
+
+    def init(self) -> jnp.ndarray:
+        return jnp.zeros((self.m,), dtype=jnp.int32)
+
+    def update(self, regs: jnp.ndarray, hashes: jnp.ndarray) -> jnp.ndarray:
+        h = hashes.astype(_U32).reshape(-1)
+        idx = (h & np.uint32(self.m - 1)).astype(jnp.int32)
+        rest = h >> np.uint32(self.b)
+        rank = trailing_zeros(rest, self.hash_bits - self.b) + 1
+        return regs.at[idx].max(rank)
+
+    def update_split(self, regs: jnp.ndarray, h_idx: jnp.ndarray,
+                     h_rank: jnp.ndarray, rank_bits: int) -> jnp.ndarray:
+        """Two-draw update (paper §11 adaptation): CYCLIC's Theorem-1 discard
+        leaves only L-n+1 usable bits — too few for large cardinalities at
+        fixed 32-bit lanes. Register index comes from one independent family
+        draw, the rank from a second; the pair is jointly pairwise
+        independent because the draws are independent."""
+        hi = h_idx.astype(_U32).reshape(-1)
+        hr = h_rank.astype(_U32).reshape(-1)
+        idx = (hi & np.uint32(self.m - 1)).astype(jnp.int32)
+        rank = trailing_zeros(hr, rank_bits) + 1
+        return regs.at[idx].max(rank)
+
+    def merge(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        return jnp.maximum(a, b)
+
+    def estimate(self, regs: jnp.ndarray) -> jnp.ndarray:
+        m = self.m
+        alpha = {16: 0.673, 32: 0.697, 64: 0.709}.get(m, 0.7213 / (1 + 1.079 / m))
+        raw = alpha * m * m / jnp.sum(jnp.exp2(-regs.astype(jnp.float32)))
+        zeros = jnp.sum(regs == 0)
+        linear = m * (jnp.log(jnp.float32(m)) - jnp.log(jnp.maximum(zeros, 1).astype(jnp.float32)))
+        use_linear = (raw <= 2.5 * m) & (zeros > 0)
+        return jnp.where(use_linear, linear, raw)
+
+
+# ---------------------------------------------------------------------------
+# Bloom filter
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomFilter:
+    """m-bit Bloom filter with k probes via double hashing.
+
+    Callers supply *two* independent 32-bit hash streams (two family draws);
+    probe_i = h_a + i * h_b mod m. State is a packed uint32 bit array.
+    """
+
+    log2_m: int = 20
+    k: int = 4
+
+    @property
+    def m(self) -> int:
+        return 1 << self.log2_m
+
+    def init(self) -> jnp.ndarray:
+        return jnp.zeros((self.m // 32,), dtype=_U32)
+
+    def _probes(self, h_a: jnp.ndarray, h_b: jnp.ndarray) -> jnp.ndarray:
+        i = jnp.arange(self.k, dtype=_U32)
+        # force h_b odd so the probe stride is invertible mod the power-of-2 m
+        hb = h_b.astype(_U32) | np.uint32(1)
+        return (h_a.astype(_U32)[..., None] + i * hb[..., None]) & np.uint32(self.m - 1)
+
+    def add(self, bits: jnp.ndarray, h_a: jnp.ndarray, h_b: jnp.ndarray) -> jnp.ndarray:
+        probes = self._probes(h_a, h_b).reshape(-1)
+        word, bit = probes >> np.uint32(5), probes & np.uint32(31)
+        return _scatter_or(bits, word, bit)
+
+    def contains(self, bits: jnp.ndarray, h_a: jnp.ndarray, h_b: jnp.ndarray) -> jnp.ndarray:
+        probes = self._probes(h_a, h_b)
+        word, bit = probes >> np.uint32(5), probes & np.uint32(31)
+        hit = (bits[word] >> bit) & np.uint32(1)
+        return jnp.all(hit == 1, axis=-1)
+
+    def fill_fraction(self, bits: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(jax.lax.population_count(bits)) / self.m
+
+
+def _scatter_or(bits: jnp.ndarray, word: jnp.ndarray, bit: jnp.ndarray) -> jnp.ndarray:
+    """OR-scatter: set bit ``bit[i]`` of ``bits[word[i]]`` for all i (jit-safe).
+
+    XLA scatter has add/max but no bitwise-OR combiner, and ``at[].max`` of the
+    multi-bit masks is wrong under collisions (max(2, 1) != 2|1). So we scatter
+    into a (words, 32) boolean *bit-plane* view with ``at[].max`` — exact OR
+    semantics per plane — then fold the planes back into packed uint32 words.
+    """
+    planes = jnp.zeros((bits.shape[0], 32), dtype=jnp.bool_)
+    planes = planes.at[word, bit].max(jnp.ones_like(bit, dtype=jnp.bool_))
+    merged = jnp.sum(planes.astype(_U32) << jnp.arange(32, dtype=_U32)[None, :],
+                     axis=-1, dtype=_U32)
+    return bits | merged
+
+
+# ---------------------------------------------------------------------------
+# MinHash
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MinHash:
+    """k-signature MinHash over a set of window hashes.
+
+    Rather than k full re-hashes of the stream, we use the standard
+    pairwise-independent affine re-mix of one base hash: sig_i = min_x (a_i *
+    h(x) + b_i mod 2^32) — each (a_i odd, b_i) pair is a strongly universal
+    remix, so the collision analysis inherits the base family's pairwise
+    independence.
+    """
+
+    k: int = 64
+
+    def init(self, key) -> Dict[str, jnp.ndarray]:
+        ka, kb = jax.random.split(key)
+        a = jax.random.bits(ka, (self.k,), dtype=_U32) | np.uint32(1)
+        b = jax.random.bits(kb, (self.k,), dtype=_U32)
+        return {"a": a, "b": b}
+
+    def signature(self, params, window_hashes: jnp.ndarray) -> jnp.ndarray:
+        h = window_hashes.astype(_U32).reshape(-1)
+        mixed = params["a"][:, None] * h[None, :] + params["b"][:, None]
+        return jnp.min(mixed, axis=-1)
+
+    @staticmethod
+    def jaccard(sig_a: jnp.ndarray, sig_b: jnp.ndarray) -> jnp.ndarray:
+        return jnp.mean((sig_a == sig_b).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Count-Min sketch
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CountMinSketch:
+    depth: int = 4
+    log2_width: int = 16
+
+    @property
+    def width(self) -> int:
+        return 1 << self.log2_width
+
+    def init(self, key) -> Dict[str, jnp.ndarray]:
+        ka, kb = jax.random.split(key)
+        return {
+            "a": jax.random.bits(ka, (self.depth,), dtype=_U32) | np.uint32(1),
+            "b": jax.random.bits(kb, (self.depth,), dtype=_U32),
+            "table": jnp.zeros((self.depth, self.width), dtype=jnp.int32),
+        }
+
+    def _cols(self, params, hashes: jnp.ndarray) -> jnp.ndarray:
+        h = hashes.astype(_U32).reshape(-1)
+        mixed = params["a"][:, None] * h[None, :] + params["b"][:, None]
+        return (mixed >> np.uint32(32 - self.log2_width)).astype(jnp.int32)
+
+    def add(self, params, hashes: jnp.ndarray):
+        cols = self._cols(params, hashes)  # (depth, N)
+        rows = jnp.arange(self.depth, dtype=jnp.int32)[:, None]
+        table = params["table"].at[rows, cols].add(1)
+        return {**params, "table": table}
+
+    def query(self, params, hashes: jnp.ndarray) -> jnp.ndarray:
+        cols = self._cols(params, hashes)
+        rows = jnp.arange(self.depth, dtype=jnp.int32)[:, None]
+        return jnp.min(params["table"][rows, cols], axis=0)

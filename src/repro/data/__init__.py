@@ -1,0 +1,1 @@
+"""Data plane: synthetic corpora, packing, hash-dedup, decontam, telemetry."""

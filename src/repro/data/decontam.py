@@ -1,0 +1,71 @@
+"""Train/eval decontamination via Bloom-filtered n-gram membership.
+
+Eval-set n-grams are fingerprinted (CYCLIC, Theorem-1 bits) into a Bloom
+filter; training batches are scanned on-device and any sequence containing a
+hit above `max_hit_frac` is flagged. Bloom FPR analysis assumes independent
+probe positions — supplied here by two independent CYCLIC draws feeding
+double hashing (pairwise independence per Theorem 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BloomFilter, make_family
+
+
+@dataclasses.dataclass
+class DecontamConfig:
+    ngram_n: int = 8
+    L: int = 32
+    log2_m: int = 22
+    k: int = 4
+    vocab: int = 1 << 17
+    max_hit_frac: float = 0.5    # flag a sequence when >50% of windows hit
+    seed: int = 7
+
+
+class Decontaminator:
+    def __init__(self, cfg: DecontamConfig):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        ka, kb = jax.random.split(key)
+        self.fam_a = make_family("cyclic", n=cfg.ngram_n, L=cfg.L)
+        self.fam_b = make_family("cyclic", n=cfg.ngram_n, L=cfg.L)
+        self.pa = self.fam_a.init(ka, cfg.vocab)
+        self.pb = self.fam_b.init(kb, cfg.vocab)
+        self.bloom = BloomFilter(log2_m=cfg.log2_m, k=cfg.k)
+        self.bits = self.bloom.init()
+        self._add = jax.jit(self._add_impl)
+        self._scan = jax.jit(self._scan_impl)
+
+    def _hashes(self, tokens) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        ha = self.fam_a.pairwise_bits(
+            self.fam_a.hash_windows_batched(self.pa, tokens))
+        hb = self.fam_b.pairwise_bits(
+            self.fam_b.hash_windows_batched(self.pb, tokens))
+        return ha, hb
+
+    def _add_impl(self, bits, tokens):
+        ha, hb = self._hashes(tokens)
+        return self.bloom.add(bits, ha.reshape(-1), hb.reshape(-1))
+
+    def _scan_impl(self, bits, tokens):
+        ha, hb = self._hashes(tokens)
+        hits = self.bloom.contains(bits, ha, hb)      # (..., W)
+        return hits.astype(jnp.float32).mean(axis=-1)
+
+    def add_eval_set(self, tokens: np.ndarray) -> None:
+        """tokens: (B, S) eval sequences to protect."""
+        self.bits = self._add(self.bits, jnp.asarray(tokens, jnp.uint32))
+
+    def contamination(self, tokens: np.ndarray) -> np.ndarray:
+        """(B, S) train batch -> (B,) fraction of windows present in eval."""
+        return np.asarray(self._scan(self.bits, jnp.asarray(tokens, jnp.uint32)))
+
+    def flag(self, tokens: np.ndarray) -> np.ndarray:
+        return self.contamination(tokens) > self.cfg.max_hit_frac

@@ -1,0 +1,122 @@
+"""Hash-based near-duplicate detection — the paper's families in production.
+
+Per document: rolling CYCLIC hashes of every n-gram (Theorem-1 bits only)
+feed a MinHash signature; Jaccard over signatures >= `threshold` flags a
+near-duplicate. Pairwise independence of the window hashes is exactly what
+makes the MinHash collision estimator unbiased, and it is the property the
+paper proves CYCLIC (after the (n-1)-bit discard) to have.
+
+Two operating modes:
+* :class:`MinHashDeduper` — streaming, host-side LSH-banded index (the shape
+  real data pipelines use: Gopher/RefinedWeb-style);
+* :func:`signature_batch` — the device-side (jit/vmap) signature computation
+  used inside the training input pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MinHash, make_family
+
+
+@dataclasses.dataclass
+class DedupConfig:
+    ngram_n: int = 8
+    L: int = 32
+    n_signatures: int = 64
+    lsh_bands: int = 16          # bands x rows = n_signatures
+    threshold: float = 0.7
+    family: str = "cyclic"
+    vocab: int = 1 << 17
+    seed: int = 0
+
+
+class MinHashDeduper:
+    """Streaming near-dedup with an LSH band index."""
+
+    def __init__(self, cfg: DedupConfig):
+        self.cfg = cfg
+        assert cfg.n_signatures % cfg.lsh_bands == 0
+        self.rows = cfg.n_signatures // cfg.lsh_bands
+        key = jax.random.PRNGKey(cfg.seed)
+        k1, k2 = jax.random.split(key)
+        self.fam = make_family(cfg.family, n=cfg.ngram_n, L=cfg.L)
+        self.fam_params = self.fam.init(k1, cfg.vocab)
+        self.mh = MinHash(k=cfg.n_signatures)
+        self.mh_params = self.mh.init(k2)
+        self._bands: List[Dict[bytes, List[int]]] = [
+            {} for _ in range(cfg.lsh_bands)]
+        self._sigs: List[np.ndarray] = []
+        self._sig_fn = jax.jit(self._signature)
+
+    def _signature(self, tokens: jnp.ndarray, n_windows) -> jnp.ndarray:
+        h = self.fam.hash_windows(self.fam_params, tokens)
+        if hasattr(self.fam, "pairwise_bits"):
+            h = self.fam.pairwise_bits(h)    # Theorem-1 discard
+        # mask windows that fall into the bucket padding out of the min
+        idx = jnp.arange(h.shape[-1])
+        h = jnp.where(idx < n_windows, h, jnp.uint32(0xFFFFFFFF))
+        return self.mh.signature(self.mh_params, h)
+
+    def signature(self, tokens: np.ndarray) -> np.ndarray:
+        # bucket-pad to the next power of two: O(log) distinct jit shapes
+        n = len(tokens)
+        bucket = max(64, 1 << int(np.ceil(np.log2(max(n, 2)))))
+        padded = np.zeros(bucket, dtype=np.uint32)
+        padded[:n] = tokens
+        n_windows = n - self.cfg.ngram_n + 1
+        return np.asarray(self._sig_fn(jnp.asarray(padded), n_windows))
+
+    def check_and_add(self, tokens: np.ndarray) -> Tuple[bool, Optional[int], float]:
+        """Returns (is_duplicate, matched_doc_id, best_jaccard). Adds the doc
+        to the index if it is not a duplicate."""
+        sig = self.signature(tokens)
+        doc_id = len(self._sigs)
+        candidates = set()
+        keys = []
+        for b in range(self.cfg.lsh_bands):
+            kb = sig[b * self.rows : (b + 1) * self.rows].tobytes()
+            keys.append(kb)
+            candidates.update(self._bands[b].get(kb, ()))
+        best_j, best_id = 0.0, None
+        for c in candidates:
+            j = float((self._sigs[c] == sig).mean())
+            if j > best_j:
+                best_j, best_id = j, c
+        if best_id is not None and best_j >= self.cfg.threshold:
+            return True, best_id, best_j
+        self._sigs.append(sig)
+        for b, kb in enumerate(keys):
+            self._bands[b].setdefault(kb, []).append(doc_id)
+        return False, None, best_j
+
+    def __len__(self):
+        return len(self._sigs)
+
+
+def signature_batch(fam, fam_params, mh: MinHash, mh_params,
+                    tokens: jnp.ndarray) -> jnp.ndarray:
+    """Device-side batched signatures. tokens: (B, S) -> (B, k) uint32."""
+    def one(t):
+        h = fam.hash_windows(fam_params, t)
+        if hasattr(fam, "pairwise_bits"):
+            h = fam.pairwise_bits(h)
+        return mh.signature(mh_params, h)
+    return jax.vmap(one)(tokens)
+
+
+def exact_duplicate_mask(fam, fam_params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """(B, S) batch -> (B,) bool; True where a sequence's full-content hash
+    collides with an earlier sequence in the batch (exact-dedup pass)."""
+    sigs = signature_batch(fam, fam_params, MinHash(k=4),
+                           MinHash(k=4).init(jax.random.PRNGKey(0)), tokens)
+    # two sequences identical => identical signatures; compare lexicographically
+    B = sigs.shape[0]
+    eq = jnp.all(sigs[:, None, :] == sigs[None, :, :], axis=-1)  # (B, B)
+    earlier = jnp.tril(jnp.ones((B, B), bool), k=-1)
+    return jnp.any(eq & earlier, axis=1)

@@ -1,0 +1,105 @@
+"""Deterministic, resumable input pipeline with the hash data-plane wired in.
+
+Design for 1000+ nodes:
+* **stateless sampling** — `batch_for_step(step)` is a pure function of
+  (seed, step, host_id, num_hosts): any host can recompute any step after a
+  restart, no iterator state to checkpoint, and elastic re-sharding of hosts
+  changes only the (host_id, num_hosts) pair;
+* **dedup / decontam / stats** hooks run per batch (device-side hashing);
+* packing: documents are packed into fixed-length rows with EOS separators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.corpus import CorpusSpec, documents
+from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.data.decontam import Decontaminator
+from repro.data.stats import NgramStats
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    seq_len: int = 1024
+    batch_size: int = 8           # per host
+    vocab: int = 8192
+    eos_id: int = 0
+    seed: int = 0
+    dedup: bool = True
+    host_id: int = 0
+    num_hosts: int = 1
+
+
+class PackedCorpus:
+    """Documents -> deduped -> one flat token stream with EOS separators."""
+
+    def __init__(self, cfg: PipelineConfig, spec: Optional[CorpusSpec] = None):
+        self.cfg = cfg
+        spec = spec or CorpusSpec(vocab=cfg.vocab, seed=cfg.seed)
+        docs, dup_of = documents(spec)
+        kept: List[np.ndarray] = []
+        self.n_duplicates = 0
+        if cfg.dedup:
+            dd = MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed))
+            for d in docs:
+                is_dup, _, _ = dd.check_and_add(d)
+                if is_dup:
+                    self.n_duplicates += 1
+                else:
+                    kept.append(d)
+        else:
+            kept = docs
+        pieces = []
+        for d in kept:
+            pieces.append(d % cfg.vocab)
+            pieces.append(np.asarray([cfg.eos_id], np.int32))
+        self.stream = np.concatenate(pieces).astype(np.int32)
+        self.n_docs_kept = len(kept)
+
+    def batch_for_step(self, step: int) -> np.ndarray:
+        """Pure function of step: (batch_size, seq_len) int32."""
+        cfg = self.cfg
+        n_rows = max(1, (len(self.stream) - 1) // cfg.seq_len)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.host_id]))
+        rows = rng.integers(0, n_rows, size=cfg.batch_size)
+        out = np.stack([
+            self.stream[r * cfg.seq_len : r * cfg.seq_len + cfg.seq_len]
+            for r in rows])
+        return out.astype(np.int32)
+
+
+class DataPlane:
+    """Bundles the paper-hash services used by the training loop."""
+
+    def __init__(self, cfg: PipelineConfig,
+                 stats: Optional[NgramStats] = None,
+                 decontam: Optional[Decontaminator] = None):
+        self.corpus = PackedCorpus(cfg)
+        self.stats = stats or NgramStats()
+        self.stats_state = self.stats.init_state()
+        self.decontam = decontam
+
+    def next_batch(self, step: int) -> Dict[str, np.ndarray]:
+        tokens = self.corpus.batch_for_step(step)
+        if self.decontam is not None:
+            clean = ~self.decontam.flag(tokens)
+            # replace contaminated rows with resampled ones (step-salted)
+            if not clean.all():
+                repl = self.corpus.batch_for_step(step + 10_000_019)
+                tokens = np.where(clean[:, None], tokens, repl)
+        self.stats_state = self.stats.update(self.stats_state, tokens)
+        return {"tokens": tokens}
+
+    def telemetry(self) -> Dict[str, float]:
+        return {
+            "distinct_ngrams": self.stats.distinct_ngrams(self.stats_state),
+            "tokens_seen": int(self.stats_state["tokens"]),
+            "docs_kept": self.corpus.n_docs_kept,
+            "docs_deduped": self.corpus.n_duplicates,
+        }

@@ -1,0 +1,68 @@
+"""Streaming corpus telemetry — the paper's §2 application, productionized.
+
+Per training batch (on-device, jit): rolling CYCLIC hashes -> HyperLogLog
+distinct-n-gram registers + CountMin heavy-hitter counts. State is a small
+pytree that lives beside the train state and is checkpointed with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CountMinSketch, HyperLogLog, make_family
+
+
+@dataclasses.dataclass
+class StatsConfig:
+    ngram_n: int = 8
+    L: int = 32
+    hll_b: int = 12
+    cms_depth: int = 4
+    cms_log2_width: int = 16
+    vocab: int = 1 << 17
+    seed: int = 11
+
+
+class NgramStats:
+    def __init__(self, cfg: StatsConfig = None):
+        self.cfg = cfg = cfg or StatsConfig()
+        key = jax.random.PRNGKey(cfg.seed)
+        kf, kc = jax.random.split(key)
+        self.fam = make_family("cyclic", n=cfg.ngram_n, L=cfg.L)
+        self.fp = self.fam.init(kf, cfg.vocab)
+        self.hll = HyperLogLog(b=cfg.hll_b,
+                               hash_bits=self.fam.out_bits)
+        self.cms = CountMinSketch(depth=cfg.cms_depth,
+                                  log2_width=cfg.cms_log2_width)
+        self._cms_params = self.cms.init(kc)
+        self._update = jax.jit(self._update_impl)
+
+    def init_state(self) -> Dict:
+        return {"hll": self.hll.init(), "cms": self._cms_params["table"],
+                "tokens": jnp.zeros((), jnp.int64 if jax.config.x64_enabled
+                                    else jnp.int32)}
+
+    def _update_impl(self, state, tokens):
+        h = self.fam.pairwise_bits(
+            self.fam.hash_windows_batched(self.fp, tokens)).reshape(-1)
+        hll_regs = self.hll.update(state["hll"], h)
+        cms = self.cms.add({**self._cms_params, "table": state["cms"]}, h)
+        return {"hll": hll_regs, "cms": cms["table"],
+                "tokens": state["tokens"] + tokens.size}
+
+    def update(self, state: Dict, tokens: jnp.ndarray) -> Dict:
+        return self._update(state, jnp.asarray(tokens, jnp.uint32))
+
+    def distinct_ngrams(self, state: Dict) -> float:
+        return float(self.hll.estimate(state["hll"]))
+
+    def heavy_hitter_count(self, state: Dict, tokens: np.ndarray) -> np.ndarray:
+        """Estimated frequency of the first window of each given sequence."""
+        h = self.fam.pairwise_bits(
+            self.fam.hash_windows_batched(self.fp, jnp.asarray(tokens, jnp.uint32)))
+        return np.asarray(self.cms.query(
+            {**self._cms_params, "table": state["cms"]}, h[..., 0]))

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Bloom-filter membership probes over hash streams.
+
+The decontamination scan (repro/data/decontam.py) tests every window
+fingerprint against an eval-set Bloom filter. On TPU the packed bit array
+(2^log2_m bits; 512 KiB at m=2^22) is VMEM-resident and each lane performs
+k double-hashed probes with shift/AND bit tests. The per-lane word gather
+from the VMEM table uses the one-hot-matmul trick only for small tables; for
+production m we tile the table into the block and use a select tree over
+table *slices* — here we implement the dynamic-slice formulation that Mosaic
+supports (per-lane `jnp.take` over a VMEM vector), validated in interpret
+mode like the other kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_U32 = jnp.uint32
+
+
+def _bloom_kernel(ha_ref, hb_ref, bits_ref, o_ref, *, k: int, log2_m: int):
+    ha = ha_ref[...]                       # (block_b, block_s)
+    hb = hb_ref[...] | np.uint32(1)        # odd stride
+    bits = bits_ref[...]                   # (m // 32,)
+    m_mask = np.uint32((1 << log2_m) - 1)
+    hit = jnp.ones(ha.shape, dtype=jnp.bool_)
+    for i in range(k):
+        probe = (ha + np.uint32(i) * hb) & m_mask
+        word = (probe >> np.uint32(5)).astype(jnp.int32)
+        bit = probe & np.uint32(31)
+        got = jnp.take(bits, word.reshape(-1), axis=0).reshape(word.shape)
+        hit = hit & (((got >> bit) & np.uint32(1)) == 1)
+    o_ref[...] = hit.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "log2_m", "block_b",
+                                             "block_s", "interpret"))
+def bloom_probe(h_a: jnp.ndarray, h_b: jnp.ndarray, bits: jnp.ndarray, *,
+                k: int = 4, log2_m: int = 22, block_b: int = 8,
+                block_s: int = 2048, interpret: bool = False) -> jnp.ndarray:
+    """h_a/h_b: (B, S) uint32 fingerprint pairs; bits: (2^log2_m / 32,)
+    packed filter. Returns (B, S) bool membership."""
+    assert h_a.shape == h_b.shape and h_a.ndim == 2
+    assert bits.shape == (1 << (log2_m - 5),)
+    B, S = h_a.shape
+    block_s = min(block_s, max(128, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    ha = jnp.pad(h_a.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    hb = jnp.pad(h_b.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    grid = (Bp // block_b, Sp // block_s)
+    out = pl.pallas_call(
+        functools.partial(_bloom_kernel, k=k, log2_m=log2_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                         memory_space=pltpu.VMEM),
+            # full filter resident per grid step
+            pl.BlockSpec((bits.shape[0],), lambda b, j: (0,),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bp, Sp), jnp.int32),
+        interpret=interpret,
+    )(ha, hb, bits)
+    return out[:B, :S].astype(jnp.bool_)
+
+
+def bloom_probe_ref(h_a, h_b, bits, *, k: int = 4, log2_m: int = 22):
+    """Pure-jnp oracle (mirrors repro.core.sketches.BloomFilter.contains)."""
+    hb = h_b.astype(_U32) | np.uint32(1)
+    i = jnp.arange(k, dtype=_U32)
+    probes = (h_a.astype(_U32)[..., None] + i * hb[..., None]) \
+        & np.uint32((1 << log2_m) - 1)
+    word = (probes >> np.uint32(5)).astype(jnp.int32)
+    bit = probes & np.uint32(31)
+    got = bits[word]
+    return jnp.all(((got >> bit) & 1) == 1, axis=-1)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: rolling GENERAL n-gram hash (paper Algorithm 3, §7).
+
+GENERAL multiplies each symbol hash by a *constant* power ``x^{n-1-k} mod
+p(x)``. Constants are trace-time Python ints, so the GF(2) multiply unrolls
+into popcount(x^k)-many XORs and deg-many shift-reduce steps — pure VPU
+bitwise ops, no gather, no MXU. Per-element cost is O(Ln), exactly the
+paper's bound for GENERAL; the CYCLIC kernel's O(L + n) is the paper's
+recommended alternative, and the benchmark harness reproduces that gap.
+
+Tiling matches `cyclic.py`: (block_b × block_s) VMEM tiles with an (n-1)
+halo streamed via a shifted BlockSpec view of the same operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_U32 = jnp.uint32
+
+
+def _mul_const(v, c: int, p: int, L: int):
+    m = np.uint32((1 << L) - 1) if L < 32 else np.uint32(0xFFFFFFFF)
+    p_low = np.uint32(p & ((1 << L) - 1))
+    v = v & m
+    acc = jnp.zeros_like(v)
+    while c:
+        if c & 1:
+            acc = acc ^ v
+        c >>= 1
+        if c:
+            msb = (v >> np.uint32(L - 1)) & np.uint32(1)
+            v = ((v << np.uint32(1)) & m) ^ (msb * p_low)
+    return acc
+
+
+def _xpows_host(n: int, p: int, L: int) -> tuple:
+    xs = [1]
+    for _ in range(n):
+        c = xs[-1] << 1
+        if c >> L:
+            c ^= p
+        xs.append(c & ((1 << L) - 1))
+    return tuple(xs)
+
+
+def _general_kernel(x_ref, nxt_ref, o_ref, *, n: int, p: int, L: int,
+                    block_s: int):
+    x = x_ref[...]
+    if n > 1:
+        cat = jnp.concatenate([x, nxt_ref[...][:, : n - 1]], axis=1)
+    else:
+        cat = x
+    xpow = _xpows_host(n, p, L)
+    acc = jnp.zeros_like(x)
+    for k in range(n):
+        acc = acc ^ _mul_const(cat[:, k : k + block_s], xpow[n - 1 - k], p, L)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("n", "p", "L", "block_b",
+                                             "block_s", "interpret"))
+def general_rolling(h1v: jnp.ndarray, *, n: int, p: int, L: int = 32,
+                    block_b: int = 8, block_s: int = 2048,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Rolling GENERAL hash mod irreducible p. (B, S) uint32 -> (B, S-n+1)."""
+    assert h1v.ndim == 2
+    B, S = h1v.shape
+    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    if n - 1 > block_s:
+        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    x = jnp.pad(h1v.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    grid = (Bp // block_b, Sp // block_s)
+    nsb = grid[1]
+
+    out = pl.pallas_call(
+        functools.partial(_general_kernel, n=n, p=p, L=L, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s),
+                         lambda b, j, _n=nsb: (b, jnp.minimum(j + 1, _n - 1)),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bp, Sp), _U32),
+        interpret=interpret,
+    )(x, x)
+    return out[:B, : S - n + 1]

@@ -1,0 +1,63 @@
+"""Public jit'd wrappers for the rolling-hash kernels.
+
+On TPU the Pallas kernels run natively; on CPU (this container, and any
+host-side data tooling) the same kernels execute under ``interpret=True`` or
+fall back to the pure-jnp reference — selectable via ``impl=``:
+
+* ``"auto"``    — Pallas on TPU, jnp reference elsewhere (fast CPU path).
+* ``"pallas"``  — force the kernel (interpret-mode off-TPU; used in tests).
+* ``"ref"``     — force the jnp oracle.
+
+All entry points accept (..., S) inputs; leading dims are flattened to a
+batch for tiling and restored on return.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.cyclic import cyclic_rolling
+from repro.kernels.cyclic_fused import cyclic_rolling_fused
+from repro.kernels.general import general_rolling
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten(x):
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+def cyclic(h1v: jnp.ndarray, *, n: int, L: int = 32, impl: str = "auto",
+           mode: str = "auto", **tile_kw) -> jnp.ndarray:
+    """Rolling CYCLIC hash of h1-mapped values. (..., S) -> (..., S-n+1)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.cyclic_ref(h1v, n, L)
+    x, lead = _flatten(h1v)
+    out = cyclic_rolling(x, n=n, L=L, mode=mode,
+                         interpret=not _on_tpu(), **tile_kw)
+    return out.reshape(lead + (out.shape[-1],))
+
+
+def general(h1v: jnp.ndarray, *, n: int, p: int, L: int = 32,
+            impl: str = "auto", **tile_kw) -> jnp.ndarray:
+    """Rolling GENERAL hash mod irreducible p. (..., S) -> (..., S-n+1)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.general_ref(h1v, n, p, L)
+    x, lead = _flatten(h1v)
+    out = general_rolling(x, n=n, p=p, L=L, interpret=not _on_tpu(), **tile_kw)
+    return out.reshape(lead + (out.shape[-1],))
+
+
+def cyclic_fused(tokens: jnp.ndarray, table: jnp.ndarray, *, n: int,
+                 L: int = 32, impl: str = "auto", **tile_kw) -> jnp.ndarray:
+    """Fused byte->fingerprint: h1 table lookup + rolling CYCLIC hash."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _ref.cyclic_fused_ref(tokens, table, n, L)
+    x, lead = _flatten(tokens)
+    out = cyclic_rolling_fused(x, table, n=n, L=L,
+                               interpret=not _on_tpu(), **tile_kw)
+    return out.reshape(lead + (out.shape[-1],))

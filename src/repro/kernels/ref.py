@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (independent of repro.core).
+
+These are deliberately naive re-implementations of the defining formulas —
+the kernels and `repro.core.families` are each validated against these, so a
+shared bug between kernel and library would still be caught by the paper's
+enumeration tests in `tests/test_independence.py`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_U32 = jnp.uint32
+
+
+def _rotl_const(v: jnp.ndarray, r: int, L: int) -> jnp.ndarray:
+    r %= L
+    m = np.uint32((1 << L) - 1) if L < 32 else np.uint32(0xFFFFFFFF)
+    v = v.astype(_U32) & m
+    if r == 0:
+        return v
+    return ((v << np.uint32(r)) | (v >> np.uint32(L - r))) & m
+
+
+def cyclic_ref(h1v: jnp.ndarray, n: int, L: int = 32) -> jnp.ndarray:
+    """CYCLIC window hashes: H_j = XOR_k rotl(h1v[j+k], n-1-k). (..., S) -> (..., S-n+1)."""
+    S = h1v.shape[-1]
+    W = S - n + 1
+    acc = jnp.zeros(h1v.shape[:-1] + (W,), dtype=_U32)
+    for k in range(n):
+        acc = acc ^ _rotl_const(h1v[..., k : k + W], (n - 1 - k) % L, L)
+    return acc
+
+
+def general_ref(h1v: jnp.ndarray, n: int, p: int, L: int = 32) -> jnp.ndarray:
+    """GENERAL window hashes mod irreducible p (given WITH top bit)."""
+    S = h1v.shape[-1]
+    W = S - n + 1
+    macc = np.uint32((1 << L) - 1) if L < 32 else np.uint32(0xFFFFFFFF)
+
+    def mul_const(v, c):
+        v = v.astype(_U32) & macc
+        acc = jnp.zeros_like(v)
+        while c:
+            if c & 1:
+                acc = acc ^ v
+            c >>= 1
+            if c:
+                msb = (v >> np.uint32(L - 1)) & np.uint32(1)
+                v = ((v << np.uint32(1)) & macc) ^ (msb * np.uint32(p & ((1 << L) - 1)))
+        return acc
+
+    # x^k mod p on host ints
+    xpow = [1]
+    for _ in range(n):
+        c = xpow[-1] << 1
+        if c >> L:
+            c ^= p
+        xpow.append(c & ((1 << L) - 1))
+
+    acc = jnp.zeros(h1v.shape[:-1] + (W,), dtype=_U32)
+    for k in range(n):
+        acc = acc ^ mul_const(h1v[..., k : k + W], xpow[n - 1 - k])
+    return acc
+
+
+def lookup_ref(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Plain-gather h1 lookup oracle for the fused kernel."""
+    return table[tokens.astype(jnp.int32)]
+
+
+def cyclic_fused_ref(tokens: jnp.ndarray, table: jnp.ndarray, n: int, L: int = 32) -> jnp.ndarray:
+    return cyclic_ref(lookup_ref(tokens, table), n, L)

@@ -1,0 +1,1 @@
+"""Launcher: production mesh, shardings, dry-run, roofline, drivers."""

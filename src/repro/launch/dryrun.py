@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init). Everything below is ordinary.
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell, build the production mesh,
+lower + compile the appropriate step function (train_step / prefill_step /
+serve_step) with ShapeDtypeStruct inputs and the launcher's shardings, then
+record memory_analysis / cost_analysis / collective traffic into
+artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, V5E
+from repro.configs.registry import ARCHS, ASSIGNED, get_config, shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import (input_specs, shapes_and_axes_state,
+                                    shapes_and_axes_params, tree_shardings)
+from repro.nn import lm
+from repro.train.step import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               unroll: bool = True, cfg_overrides: dict = None):
+    """Lower + compile one cell. Returns (compiled, lowered, meta)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        specs = input_specs(cfg, shape, mesh)
+        if shape.kind == "train":
+            state_shapes, state_axes = shapes_and_axes_state(cfg)
+            state_sh = tree_shardings(state_shapes, state_axes, mesh)
+            step = make_train_step(cfg, num_microbatches=cfg.num_microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, specs["batch_sharding"]),
+                out_shardings=(state_sh, _replicated(mesh)),
+                donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, specs["batch"])
+        elif shape.kind == "prefill":
+            p_shapes, p_axes = shapes_and_axes_params(cfg)
+            p_sh = tree_shardings(p_shapes, p_axes, mesh)
+            max_len = shape.seq_len + cfg.prefix_len
+            def prefill_fn(params, batch):
+                return lm.prefill(params, cfg, batch["tokens"], max_len,
+                                  batch.get("prefix"))
+            # cache output shardings: same rule tree as decode-cell caches
+            cache_shapes = jax.eval_shape(
+                lambda p, b: prefill_fn(p, b)[1], p_shapes, specs["batch"])
+            from repro.launch.shardings import cache_axes
+            cache_sh = tree_shardings(cache_shapes, cache_axes(cfg, mesh), mesh)
+            logits_sh = NamedSharding(mesh, PartitionSpec(None, "model"))
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(p_sh, specs["batch_sharding"]),
+                             out_shardings=((logits_sh, cache_sh)))
+            lowered = jitted.lower(p_shapes, specs["batch"])
+        else:  # decode
+            p_shapes, p_axes = shapes_and_axes_params(cfg)
+            p_sh = tree_shardings(p_shapes, p_axes, mesh)
+            def serve_fn(params, token, caches):
+                return lm.decode_step(params, cfg, token, caches)
+            logits_sh = NamedSharding(mesh, PartitionSpec(None, "model"))
+            jitted = jax.jit(
+                serve_fn,
+                in_shardings=(p_sh, specs["token_sharding"],
+                              specs["cache_sharding"]),
+                out_shardings=(logits_sh, specs["cache_sharding"]),
+                donate_argnums=(2,))
+            lowered = jitted.lower(p_shapes, specs["token"], specs["caches"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, lowered, {"lower_s": t_lower, "compile_s": t_compile,
+                               "mesh": _mesh_tag(multi_pod)}
+
+
+def _probe_costs(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)
+    counts = hlo_analysis.count_collectives(hlo)
+    return {"flops": hlo_analysis.dot_flops(hlo),      # exact matmul FLOPs
+            "xla_flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll, "counts": counts}
+
+
+PROBE_RS = (2, 4)
+
+
+def depth_extrapolated_costs(arch: str, shape_name: str, *, multi_pod: bool,
+                             cfg_overrides: dict = None) -> dict:
+    """Exact full-depth per-device costs from two shallow *unrolled* probes.
+
+    Every scan repeat is structurally identical, so per-repeat dot FLOPs and
+    collective bytes are exactly linear in depth (verified: increments agree
+    to 5 digits); XLA's own while-body-counted-once numbers are sidestepped.
+    'bytes accessed' has mild (~10%) fusion-boundary nonlinearity — noted in
+    EXPERIMENTS.md §Roofline.
+    """
+    cfg = get_config(arch)
+    R = cfg.repeats
+    unit = len(cfg.unit)
+    r_lo, r_hi = PROBE_RS
+    probes = {}
+    for r in (r_lo, r_hi):
+        ov = dict(cfg_overrides or {})
+        # cost probes run at 1 microbatch: gradient accumulation is another
+        # while loop XLA counts once, and it leaves per-step math unchanged
+        # (the small grad-buffer re-read overhead is not counted — noted).
+        ov.update(n_layers=unit * r, scan_unroll=True, num_microbatches=1)
+        compiled, _, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                    unroll=False, cfg_overrides=ov)
+        probes[r] = _probe_costs(compiled)
+        del compiled
+
+    def extrap(v_lo, v_hi):
+        b = (v_hi - v_lo) / (r_hi - r_lo)
+        a = v_lo - b * r_lo
+        return a + b * R
+
+    out = {"flops": extrap(probes[r_lo]["flops"], probes[r_hi]["flops"]),
+           "xla_flops": extrap(probes[r_lo]["xla_flops"], probes[r_hi]["xla_flops"]),
+           "bytes": extrap(probes[r_lo]["bytes"], probes[r_hi]["bytes"]),
+           "coll": {k: extrap(probes[r_lo]["coll"][k], probes[r_hi]["coll"][k])
+                    for k in probes[r_lo]["coll"]},
+           "counts": {k: extrap(probes[r_lo]["counts"][k], probes[r_hi]["counts"][k])
+                      for k in probes[r_lo]["counts"]}}
+    return out
+
+
+def analyze(compiled, arch: str, shape_name: str, meta: dict,
+            costs: dict = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = 512 if meta["mesh"] == "2x16x16" else 256
+
+    if costs is None:
+        costs = _probe_costs(compiled)
+    flops_dev, bytes_dev = costs["flops"], costs["bytes"]
+    coll, counts = costs["coll"], costs["counts"]
+    xla_flops_dev = costs.get("xla_flops", 0.0)
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes"):
+        mem_d[attr] = getattr(mem, attr, None)
+
+    flops_total = flops_dev * chips
+    bytes_total = bytes_dev * chips
+    terms = V5E.roofline_seconds(flops_total, bytes_total, coll["total"] * chips,
+                                 chips)
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6*N_active*tokens for train (fwd+bwd); 2*N_active*tokens fwd
+    if shape.kind == "train":
+        model_flops = 6.0 * cfg.param_count(active_only=True) * shape.tokens
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * cfg.param_count(active_only=True) * shape.tokens
+    else:
+        model_flops = 2.0 * cfg.param_count(active_only=True) * shape.global_batch
+
+    # per-device HBM residency (params + opt + caches): argument bytes
+    arg_b = mem_d.get("argument_size_in_bytes") or 0
+    tmp_b = mem_d.get("temp_size_in_bytes") or 0
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": meta["mesh"], "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(meta["lower_s"], 2),
+        "compile_s": round(meta["compile_s"], 2),
+        "flops_per_device": flops_dev,
+        "xla_flops_per_device": xla_flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll["total"],
+        "collective_breakdown": {k: v for k, v in coll.items() if k != "total"},
+        "collective_counts": counts,
+        "memory_analysis": mem_d,
+        "hbm_per_device_gb": round((arg_b + tmp_b) / 1e9, 3),
+        "roofline": {k: v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / flops_total) if flops_total else None,
+        "ok": True,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = ARTIFACT_DIR, verbose: bool = True,
+             cfg_overrides: dict = None, variant: str = "") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{_mesh_tag(multi_pod)}"
+    if variant:
+        tag += f"__{variant}"
+    try:
+        # pass A: FULL config, scanned (the deployable program) — proves the
+        # production compile and yields memory analysis
+        compiled, lowered, meta = lower_cell(arch, shape_name,
+                                             multi_pod=multi_pod, unroll=False,
+                                             cfg_overrides=cfg_overrides)
+        # pass B: depth-extrapolated exact cost accounting
+        costs = depth_extrapolated_costs(arch, shape_name, multi_pod=multi_pod,
+                                         cfg_overrides=cfg_overrides)
+        rec = analyze(compiled, arch, shape_name, meta, costs)
+        rec["variant"] = variant
+        rec["cfg_overrides"] = cfg_overrides or {}
+        if verbose:
+            print(f"[dryrun] {tag}: compile={rec['compile_s']}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"dominant={rec['dominant']} "
+                  f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}")
+        del compiled, lowered
+    except Exception as e:  # noqa: BLE001 — record failures as artifacts
+        rec = {"arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        if verbose:
+            print(f"[dryrun] {tag}: FAILED {rec['error']}")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out-dir", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            cfg = get_config(arch)
+            for sname, shp in SHAPES.items():
+                if shape_applicable(cfg, shp):
+                    cells.append((arch, sname))
+        # smallest-first: fastest feedback, earliest artifacts
+        cells.sort(key=lambda c: get_config(c[0]).param_count())
+    else:
+        assert args.arch and args.shape, "--arch and --shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch, sname in cells:
+            tag = f"{arch}__{sname}__{_mesh_tag(multi_pod)}"
+            path = os.path.join(args.out_dir, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                try:
+                    ok = json.load(open(path)).get("ok", False)
+                except Exception:
+                    ok = False
+                if ok:
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+            rec = run_cell(arch, sname, multi_pod=multi_pod,
+                           out_dir=args.out_dir)
+            failures += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Compiled-HLO analysis: collective traffic + roofline terms.
+
+`collective_bytes(hlo_text)` sums the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction in
+the per-device program (the §Roofline recipe). Sizes come from a first pass
+that records the result type of every named instruction.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+\[[^\]]*\][^\s]*)\s+([\w\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device operand bytes by collective kind (plus 'total')."""
+    sizes: Dict[str, int] = {}
+    coll_lines = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        sizes[name] = _type_bytes(type_str)
+        for kind in COLLECTIVES:
+            # match the op name exactly (op may carry a suffix like `-start`)
+            if op == kind or op.startswith(kind + "-"):
+                if op.endswith("-done"):
+                    break  # avoid double count of async pairs
+                paren = line.find("(")
+                args = line[paren:] if paren != -1 else ""
+                # strip metadata braces to limit operand regex scope
+                args = args.split("metadata=")[0]
+                coll_lines.append((kind, args))
+                break
+    out = {k: 0 for k in COLLECTIVES}
+    for kind, args in coll_lines:
+        for op_name in _OPERAND_RE.findall(args):
+            out[kind] += sizes.get(op_name, 0)
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def dot_flops(hlo_text: str) -> float:
+    """Exact matmul FLOPs of the per-device program: sum over `dot` ops of
+    2 * numel(result) * K (K = lhs contracting size). This is the MFU
+    numerator convention; elementwise work is accounted by the memory term."""
+    # name -> dims (arrays only)
+    dims: Dict[str, Tuple[int, ...]] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        dm = _DIMS_RE.match(type_str)
+        if dm is not None:
+            dims[name] = tuple(int(d) for d in dm.group(1).split(",") if d)
+        if op != "dot":
+            continue
+        paren = line.find("(")
+        args = line[paren:].split("metadata=")[0]
+        ops = _OPERAND_RE.findall(args)
+        cm = _CONTRACT_RE.search(line)
+        if not ops or cm is None:
+            continue
+        lhs_dims = dims.get(ops[0], ())
+        k = 1
+        for ci in (int(c) for c in cm.group(1).split(",") if c):
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+        result = dims.get(name, ())
+        numel = 1
+        for d in result:
+            numel *= d
+        total += 2.0 * numel * k
+    return total
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        for kind in COLLECTIVES:
+            if (op == kind or op.startswith(kind + "-")) and not op.endswith("-done"):
+                counts[kind] += 1
+                break
+    return counts

@@ -1,0 +1,162 @@
+"""Roofline report generator — reads artifacts/dryrun/*.json, renders the
+§Dry-run and §Roofline tables for EXPERIMENTS.md and CSV rows for
+benchmarks.run.
+
+Terms (per §Roofline, v5e constants):
+  compute_s    = HLO matmul FLOPs / (chips * 197e12)
+  memory_s     = HLO bytes accessed / (chips * 819e9)
+  collective_s = collective operand bytes / (chips * 50e9)
+All three use totals = per-device x chips, so the ratios are per-chip.
+Roofline fraction = model_flops-at-peak / max(term)  — how close the cell's
+*useful* work runs to the hardware bound set by its dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES, V5E
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def load(art_dir: str = ARTIFACT_DIR, include_variants: bool = False) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant") and not include_variants:
+            continue  # §Perf hillclimb variants live in their own table
+        recs.append(r)
+    return recs
+
+
+def roofline_fraction(rec: Dict) -> Optional[float]:
+    """useful-work-at-peak vs the dominant bound:
+    (model_flops / peak) / max(compute_s, memory_s, collective_s)."""
+    if not rec.get("ok"):
+        return None
+    terms = rec["roofline"]
+    t_bound = max(terms.values())
+    if t_bound <= 0:
+        return None
+    t_useful = rec["model_flops"] / (rec["chips"] * V5E.peak_flops)
+    return t_useful / t_bound
+
+
+def fmt_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful/HLO | roofline frac | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED: {r.get('error','')[:60]} | | | | | | |")
+            continue
+        t = r["roofline"]
+        frac = roofline_fraction(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{(r['useful_flops_ratio'] or 0):.3f} | "
+            f"{(frac or 0):.3f} | {r['hbm_per_device_gb']:.2f} |")
+    return "\n".join(out)
+
+
+def fmt_dryrun_table(recs: List[Dict]) -> str:
+    rows = sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | ok | compile_s | FLOPs/dev | bytes/dev | "
+           "coll bytes/dev | AG/AR/RS/A2A/CP counts |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | NO | "
+                       f"{r.get('error','')[:70]} | | | | |")
+            continue
+        c = r["collective_counts"]
+        cc = "/".join(str(int(c.get(k, 0))) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.1f} | {r['flops_per_device']:.3e} | "
+            f"{r['bytes_per_device']:.3e} | "
+            f"{r['collective_bytes_per_device']:.3e} | {cc} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb_targets(recs: List[Dict]) -> Dict[str, Dict]:
+    """The three §Perf cells: worst roofline fraction, most collective-bound,
+    most representative of the paper's data-plane workload (train shape on
+    the biggest-batch token stream = the hash pipeline's host arch)."""
+    ok = [r for r in recs if r.get("ok") and r["mesh"] == "16x16"]
+    if not ok:
+        return {}
+    worst = min(ok, key=lambda r: roofline_fraction(r) or 9e9)
+    coll = max(ok, key=lambda r: (r["roofline"]["collective_s"] /
+                                  max(sum(r["roofline"].values()), 1e-30)))
+    return {"worst_fraction": worst, "most_collective_bound": coll}
+
+
+def bench_rows(art_dir: str = ARTIFACT_DIR) -> List[str]:
+    recs = load(art_dir)
+    out = []
+    for r in recs:
+        if not r.get("ok"):
+            out.append(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0.0,FAILED")
+            continue
+        frac = roofline_fraction(r)
+        t = max(r["roofline"].values())
+        out.append(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+            f"{t*1e6:.1f},"
+            f"dominant={r['dominant'].replace('_s','')};frac={frac:.3f}")
+    return out
+
+
+def _splice(text: str, start: str, end: str, payload: str) -> str:
+    i = text.index(start) + len(start)
+    j = text.index(end)
+    return text[:i] + "\n" + payload + "\n" + text[j:]
+
+
+def write_experiments(path: Optional[str] = None,
+                      art_dir: str = ARTIFACT_DIR) -> None:
+    path = path or os.path.join(os.path.dirname(__file__),
+                                "../../../EXPERIMENTS.md")
+    recs = load(art_dir)
+    with open(path) as f:
+        text = f.read()
+    dry = fmt_dryrun_table(recs)
+    roof = ("**single pod (16×16, 256 chips)**\n\n" + fmt_table(recs, "16x16")
+            + "\n\n**multi-pod (2×16×16, 512 chips)**\n\n"
+            + fmt_table(recs, "2x16x16"))
+    text = _splice(text, "<!-- DRYRUN_TABLE_START -->",
+                   "<!-- DRYRUN_TABLE_END -->", dry)
+    text = _splice(text, "<!-- ROOFLINE_TABLE_START -->",
+                   "<!-- ROOFLINE_TABLE_END -->", roof)
+    # (the §Perf target selection is curated by hand in EXPERIMENTS.md; only
+    # the tables are regenerated)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(recs)} artifacts)")
+
+
+def main():
+    import sys
+    if "--write" in sys.argv:
+        write_experiments()
+        return
+    recs = load()
+    print(f"{len(recs)} artifacts")
+    print(fmt_table(recs, "16x16"))
+    print()
+    print(fmt_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Sharding trees + abstract (no-allocation) state/caches for the launcher."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.nn import lm
+from repro.nn.sharding import RULES, kv_cache_axes, spec_for
+from repro.train.step import init_state
+
+
+def shapes_and_axes_params(cfg: ModelConfig):
+    """Abstract param shapes + logical axes, via eval_shape (no allocation)."""
+    cap: Dict[str, Any] = {}
+
+    def fn(key):
+        values, axes = lm.init(key, cfg)
+        cap["axes"] = axes
+        return values
+
+    shapes = jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return shapes, cap["axes"]
+
+
+def shapes_and_axes_state(cfg: ModelConfig):
+    """Abstract train-state shapes + axes (params + optimizer + step)."""
+    cap: Dict[str, Any] = {}
+
+    def fn(key):
+        state, axes = init_state(key, cfg)
+        cap["axes"] = axes
+        return state
+
+    shapes = jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return shapes, cap["axes"]
+
+
+def cache_axes(cfg: ModelConfig, mesh: Mesh):
+    """Logical axes tree matching lm.init_caches (stacked over repeats)."""
+    from repro.nn.attention import KVCache
+    from repro.nn.mamba2 import MambaCache
+    kv_ax = kv_cache_axes(cfg, mesh)
+    out = {}
+    for u, spec in enumerate(cfg.unit):
+        if spec.kind == "attn":
+            c = KVCache(k=("stack",) + kv_ax, v=("stack",) + kv_ax,
+                        length=("stack",))
+        else:
+            c = MambaCache(conv=("stack", "batch", None, "inner"),
+                           state=("stack", "batch", "ssm_heads", None, None),
+                           length=("stack",))
+        out[f"u{u}"] = c
+    return out
+
+
+def tree_shardings(shapes, axes, mesh: Mesh, rules=RULES):
+    """ShapeDtypeStruct tree + logical-axes tree -> NamedSharding tree."""
+    def one(s, ax):
+        return NamedSharding(mesh, spec_for(s.shape, ax, mesh, rules))
+    return jax.tree_util.tree_map(one, shapes, axes)
+
+
+def batch_sharding(mesh: Mesh, shape: Tuple[int, ...], axes) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, mesh))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins + shardings for every model input of the
+    given (arch x shape) cell. No device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": toks}
+        shards = {"tokens": batch_sharding(mesh, (B, S), ("batch", "seq"))}
+        if cfg.prefix_len:
+            pfx = jax.ShapeDtypeStruct((B, cfg.prefix_len, cfg.d_model),
+                                       jnp.bfloat16)
+            batch["prefix"] = pfx
+            shards["prefix"] = batch_sharding(
+                mesh, pfx.shape, ("batch", "seq", "embed_act"))
+        out["batch"] = batch
+        out["batch_sharding"] = shards
+    else:  # decode: one new token against an S-token cache
+        token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        out["token"] = token
+        out["token_sharding"] = batch_sharding(mesh, (B, 1), ("batch", "seq"))
+        caches = jax.eval_shape(
+            functools.partial(lm.init_caches, cfg, B, S))
+        cax = cache_axes(cfg, mesh)
+        out["caches"] = caches
+        out["cache_sharding"] = tree_shardings(caches, cax, mesh)
+    return out

@@ -1,0 +1,100 @@
+"""Multi-pod training driver.
+
+On a real cluster every host runs this same script (jax.distributed
+initializes from the cluster env); on this container it drives the
+single-process mesh. The driver wires: mesh -> sharded state -> hash data
+plane -> pjit'd train step -> checkpoint/restore -> watchdog.
+
+  python -m repro.launch.train --arch qwen1.5-0.5b --steps 50 \
+      --data-mesh 2 --model-mesh 2 [--recommended] [--resume]
+"""
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-tiny")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--pod-mesh", type=int, default=0)
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="emulate N host devices (sets XLA_FLAGS; this "
+                         "container has 1 real core)")
+    ap.add_argument("--recommended", action="store_true",
+                    help="apply EXPERIMENTS §Perf RECOMMENDED overrides")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count="
+                                   f"{args.host_devices}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.configs.registry import get_config, get_recommended_config
+    from repro.data.pipeline import DataPlane, PipelineConfig
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.shardings import shapes_and_axes_state, tree_shardings
+    from repro.train import checkpoint as ckpt
+    from repro.train.fault import Watchdog
+    from repro.train.optim import Schedule
+    from repro.train.step import init_state, make_train_step
+
+    cfg = (get_recommended_config(args.arch) if args.recommended
+           else get_config(args.arch))
+    if cfg.param_count() > 1e9:
+        print(f"warning: {args.arch} is {cfg.param_count()/1e9:.0f}B params — "
+              "on this CPU container use the smoke config archs or paper-tiny")
+
+    mesh = make_debug_mesh(args.data_mesh, args.model_mesh, pod=args.pod_mesh)
+    sched = Schedule(peak_lr=3e-3, warmup_steps=10, decay_steps=args.steps)
+    data = DataPlane(PipelineConfig(seq_len=args.seq, batch_size=args.batch,
+                                    vocab=cfg.vocab, dedup=True))
+    with mesh:
+        shapes, axes = shapes_and_axes_state(cfg)
+        state_sh = tree_shardings(shapes, axes, mesh)
+        batch_sh = {"tokens": NamedSharding(mesh, PartitionSpec(
+            ("pod", "data") if args.pod_mesh else "data", None))}
+        step_fn = jax.jit(
+            make_train_step(cfg, sched, num_microbatches=cfg.num_microbatches),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, NamedSharding(mesh, PartitionSpec())),
+            donate_argnums=(0,))
+
+        state, _ = init_state(jax.random.PRNGKey(0), cfg, sched)
+        state = jax.device_put(state, state_sh)
+        start = 0
+        if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+            state, start = ckpt.restore(state, args.ckpt_dir,
+                                        shardings=state_sh)
+            print(f"resumed from step {start}")
+
+        wd = Watchdog()
+        for step in range(start, args.steps):
+            wd.start()
+            batch = {k: jax.device_put(jnp.asarray(v), batch_sh[k])
+                     for k, v in data.next_batch(step).items()}
+            state, metrics = step_fn(state, batch)
+            dt = wd.stop(step)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):8.4f} "
+                      f"{dt*1e3:8.1f} ms "
+                      f"(stragglers so far: {len(wd.stragglers)})")
+            if (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(state, args.ckpt_dir, step + 1)
+        tel = data.telemetry()
+        print(f"done. data plane: {tel}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model substrate: layers, attention, SSD, MoE, blocks, unified LM."""

@@ -1,0 +1,215 @@
+"""GQA/MQA attention with a pure-JAX chunked-flash forward.
+
+Why pure JAX and not a Pallas kernel: the dry-run must lower and compile for
+a 512-device host mesh (CPU backend), where Mosaic kernels cannot lower.
+The chunked formulation below gives the same O(S) memory behaviour as flash
+attention — an online-softmax `lax.scan` over KV chunks — and XLA:TPU fuses
+it well. See DESIGN.md §4; a Mosaic flash kernel is a drop-in later.
+
+Supports: GQA/MQA (any kv<=heads), RoPE/NoPE, qk-norm (qwen3), qkv-bias
+(qwen1.5), prefix-LM masking (paligemma/musicgen stubs), decode with a
+fixed-capacity KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.layers import linear_apply, linear_init, rmsnorm_apply, rmsnorm_init, rope
+from repro.nn.sharding import P_, constrain
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, Smax, KV, D)
+    v: jnp.ndarray        # (B, Smax, KV, D)
+    length: jnp.ndarray   # () int32 — tokens already in cache
+
+
+def attn_init(key, cfg) -> dict:
+    hd = cfg.resolved_head_dim
+    dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], (cfg.d_model,), (cfg.n_heads, hd),
+                          ("embed", "heads", "head_dim"), bias=cfg.qkv_bias,
+                          bias_axes=("heads", "head_dim"), dtype=dtype),
+        "wk": linear_init(ks[1], (cfg.d_model,), (cfg.n_kv_heads, hd),
+                          ("embed", "kv_heads", "head_dim"), bias=cfg.qkv_bias,
+                          bias_axes=("kv_heads", "head_dim"), dtype=dtype),
+        "wv": linear_init(ks[2], (cfg.d_model,), (cfg.n_kv_heads, hd),
+                          ("embed", "kv_heads", "head_dim"), bias=cfg.qkv_bias,
+                          bias_axes=("kv_heads", "head_dim"), dtype=dtype),
+        "wo": linear_init(ks[3], (cfg.n_heads, hd), (cfg.d_model,),
+                          ("heads", "head_dim", "embed"), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions):
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    q = linear_apply(params["wq"], x, "bsd,dhq->bshq", compute_dtype=adt)
+    k = linear_apply(params["wk"], x, "bsd,dgq->bsgq", compute_dtype=adt)
+    v = linear_apply(params["wv"], x, "bsd,dgq->bsgq", compute_dtype=adt)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, prefix_len: int):
+    """(…, Sq, Sk) bool: causal + bidirectional prefix."""
+    causal = k_pos[..., None, :] <= q_pos[..., :, None]
+    if prefix_len > 0:
+        causal = causal | (k_pos[..., None, :] < prefix_len)
+    return causal
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, kv_chunk: int, prefix_len: int = 0,
+                    softcap: float = 0.0, kv_valid: Optional[jnp.ndarray] = None,
+                    bf16_probs: bool = False):
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D); q_pos: (B, Sq); k_pos: (B, Sk).
+    kv_valid: optional (B, Sk) bool — False entries are masked (cache tail).
+    Memory high-water: one (B, Sq, H, kv_chunk) score block.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = 1.0 / np.sqrt(D)
+    nchunks = -(-Sk // kv_chunk)
+    pad = nchunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        kv_valid = (jnp.pad(kv_valid, ((0, 0), (0, pad)))
+                    if kv_valid is not None
+                    else jnp.pad(jnp.ones((B, Sk), bool), ((0, 0), (0, pad))))
+    elif kv_valid is None:
+        kv_valid = jnp.ones((B, Sk), bool)
+
+    qg = q.reshape(B, Sq, KV, rep, D).astype(jnp.float32)
+    kc = k.reshape(B, nchunks, kv_chunk, KV, D)
+    vc = v.reshape(B, nchunks, kv_chunk, KV, D)
+    pc = k_pos.reshape(B, nchunks, kv_chunk)
+    mc = kv_valid.reshape(B, nchunks, kv_chunk)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb, vb_mask = blk  # (B, kc, KV, D), …, (B, kc), (B, kc)
+        s = jnp.einsum("bsgrd,bcgd->bsgrc", qg, kb.astype(jnp.float32)) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = _mask(q_pos, pb, prefix_len) & vb_mask[:, None, :]   # (B, Sq, kc)
+        s = jnp.where(ok[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        if bf16_probs:
+            # §Perf: bf16 probability tensor for the PV product (stats f32)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bsgrc,bcgd->bsgrd", p.astype(jnp.bfloat16),
+                vb.astype(jnp.bfloat16),
+                preferred_element_type=jnp.float32)
+        else:
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bsgrc,bcgd->bsgrd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, rep), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, rep, D), jnp.float32)
+    blks = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+            jnp.moveaxis(pc, 1, 0), jnp.moveaxis(mc, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), blks)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def flash_attention_causal_skip(q, k, v, q_pos, k_pos, *, q_chunk: int,
+                                kv_chunk: int, prefix_len: int = 0,
+                                softcap: float = 0.0,
+                                bf16_probs: bool = False):
+    """Causal flash with static per-q-chunk KV ranges: q chunk i only visits
+    KV blocks [0, ceil((i+1)*qc / kc)) — fully-future blocks are never
+    computed (the baseline computes and masks them). Requires aligned
+    positions (training/prefill), enforced by the caller."""
+    B, Sq, H, D = q.shape
+    nq = -(-Sq // q_chunk)
+    pad_q = nq * q_chunk - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=2**30)
+    outs = []
+    for qi in range(nq):
+        sl = slice(qi * q_chunk, (qi + 1) * q_chunk)
+        need = max((qi + 1) * q_chunk, prefix_len)  # prefix rows see the full prefix
+        hi = min(-(-need // kv_chunk) * kv_chunk, k.shape[1])
+        outs.append(flash_attention(
+            q[:, sl], k[:, :hi], v[:, :hi], q_pos[:, sl], k_pos[:, :hi],
+            kv_chunk=kv_chunk, prefix_len=prefix_len, softcap=softcap,
+            bf16_probs=bf16_probs))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :Sq]
+
+
+def attn_forward(params, cfg, x, positions, *, prefix_len: int = 0,
+                 return_kv: bool = False):
+    """Training / prefill forward. x: (B, S, D); positions: (B, S)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if cfg.attn_causal_skip:
+        out = flash_attention_causal_skip(
+            q, k, v, positions, positions, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk, prefix_len=prefix_len,
+            softcap=cfg.attn_logit_softcap, bf16_probs=cfg.attn_bf16_scores)
+    else:
+        out = flash_attention(q, k, v, positions, positions,
+                              kv_chunk=cfg.kv_chunk, prefix_len=prefix_len,
+                              softcap=cfg.attn_logit_softcap,
+                              bf16_probs=cfg.attn_bf16_scores)
+    adt = out.dtype
+    y = linear_apply(params["wo"], out, "bshq,hqd->bsd", compute_dtype=adt)
+    y = constrain(y, ("batch", "seq", "embed_act"))
+    return (y, (k, v)) if return_kv else y
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def attn_decode(params, cfg, x, cache: KVCache, mesh=None):
+    """Single-step decode. x: (B, 1, D). Returns (y, new_cache)."""
+    B = x.shape[0]
+    pos = jnp.broadcast_to(cache.length[None, None], (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            cache.length, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            cache.length, axis=1)
+    Smax = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32)[None], (B, Smax))
+    valid = k_pos <= cache.length  # includes the token just written
+    out = flash_attention(q, k, v, pos, k_pos, kv_chunk=min(cfg.kv_chunk, Smax),
+                          softcap=cfg.attn_logit_softcap, kv_valid=valid)
+    y = linear_apply(params["wo"], out, "bshq,hqd->bsd", compute_dtype=out.dtype)
+    new_cache = KVCache(k=k, v=v, length=cache.length + 1)
+    return y, new_cache

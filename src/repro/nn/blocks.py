@@ -1,0 +1,117 @@
+"""Transformer / Mamba / hybrid block assembly (pre-norm residual)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec
+from repro.nn import attention as attn
+from repro.nn import mamba2
+from repro.nn.layers import linear_apply, linear_init, rmsnorm_apply, rmsnorm_init
+from repro.nn.moe import moe_forward, moe_init
+from repro.nn.sharding import constrain
+
+
+def mlp_init(key, cfg) -> dict:
+    dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": linear_init(k1, (cfg.d_model,), (cfg.d_ff,), ("embed", "mlp"),
+                            dtype=dtype),
+        "w_out": linear_init(k2, (cfg.d_ff,), (cfg.d_model,), ("mlp", "embed"),
+                             dtype=dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = linear_init(k3, (cfg.d_model,), (cfg.d_ff,),
+                                  ("embed", "mlp"), dtype=dtype)
+    return p
+
+
+def mlp_forward(params, cfg, x):
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    h = linear_apply(params["w_in"], x, "bsd,df->bsf", compute_dtype=adt)
+    if cfg.mlp_gated:
+        g = linear_apply(params["w_gate"], x, "bsd,df->bsf", compute_dtype=adt)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(adt) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(adt)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    y = linear_apply(params["w_out"], h, "bsf,fd->bsd", compute_dtype=adt)
+    return constrain(y, ("batch", "seq", "embed_act"))
+
+
+def block_init(key, cfg, spec: LayerSpec) -> dict:
+    dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+    k_mix, k_ffn = jax.random.split(key)
+    p: Dict[str, Any] = {"norm_mix": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.kind == "attn":
+        p["attn"] = attn.attn_init(k_mix, cfg)
+    else:
+        p["mamba"] = mamba2.mamba_init(k_mix, cfg)
+    if spec.ffn != "none":
+        p["norm_ffn"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = moe_init(k_ffn, cfg) if spec.ffn == "moe" else mlp_init(k_ffn, cfg)
+    return p
+
+
+def block_forward(params, cfg, spec: LayerSpec, x, positions, *,
+                  prefix_len: int = 0):
+    """Returns (x, aux)."""
+    aux = {}
+    h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        mixed = attn.attn_forward(params["attn"], cfg, h, positions,
+                                  prefix_len=prefix_len)
+    else:
+        mixed = mamba2.mamba_forward(params["mamba"], cfg, h)
+    x = x + mixed
+    if spec.ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, aux = moe_forward(params["ffn"], cfg, h)
+        else:
+            y = mlp_forward(params["ffn"], cfg, h)
+        x = x + y
+    return x, aux
+
+
+def block_prefill(params, cfg, spec: LayerSpec, x, positions, *,
+                  prefix_len: int = 0):
+    """Like block_forward but also returns the layer cache."""
+    h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        mixed, (k, v) = attn.attn_forward(params["attn"], cfg, h, positions,
+                                          prefix_len=prefix_len, return_kv=True)
+        cache = (k, v)
+    else:
+        mixed, cache = mamba2.mamba_forward(params["mamba"], cfg, h,
+                                            return_cache=True)
+    x = x + mixed
+    if spec.ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, _ = moe_forward(params["ffn"], cfg, h)
+        else:
+            y = mlp_forward(params["ffn"], cfg, h)
+        x = x + y
+    return x, cache
+
+
+def block_decode(params, cfg, spec: LayerSpec, x, cache):
+    """Single-step decode. Returns (x, new_cache)."""
+    h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
+    if spec.kind == "attn":
+        mixed, cache = attn.attn_decode(params["attn"], cfg, h, cache)
+    else:
+        mixed, cache = mamba2.mamba_decode(params["mamba"], cfg, h, cache)
+    x = x + mixed
+    if spec.ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, _ = moe_forward(params["ffn"], cfg, h)
+        else:
+            y = mlp_forward(params["ffn"], cfg, h)
+        x = x + y
+    return x, cache

@@ -1,0 +1,117 @@
+"""Base layers: RMSNorm, logical-axis-annotated linear, embedding, RoPE.
+
+Functional style: ``*_init(key, ...) -> P_-tree``, ``*_apply(params, x)``.
+All params carry logical axis names (see nn/sharding.py) so the launcher can
+derive PartitionSpecs without a registry.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.sharding import P_, constrain
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    """He-style fan-in init (matches common LM practice)."""
+    stddev = scale / np.sqrt(shape[0] if len(shape) else 1.0)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": P_(jnp.ones((dim,), dtype=dtype), ("embed_act",))}
+
+
+def rmsnorm_apply(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    orig = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Linear (arbitrary in/out shapes, einsum-based)
+# ---------------------------------------------------------------------------
+
+def linear_init(key, in_dims: Tuple[int, ...], out_dims: Tuple[int, ...],
+                axes: Tuple[Optional[str], ...], *, bias: bool = False,
+                bias_axes: Optional[Tuple[Optional[str], ...]] = None,
+                dtype=jnp.float32, scale: float = 1.0) -> dict:
+    shape = tuple(in_dims) + tuple(out_dims)
+    fan_in = int(np.prod(in_dims))
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+         * (scale / np.sqrt(fan_in))).astype(dtype)
+    out = {"w": P_(w, axes)}
+    if bias:
+        out["b"] = P_(jnp.zeros(tuple(out_dims), dtype=dtype),
+                      bias_axes or axes[len(in_dims):])
+    return out
+
+
+def linear_apply(params: dict, x: jnp.ndarray, contract: str,
+                 compute_dtype=None) -> jnp.ndarray:
+    """einsum-style apply; `contract` e.g. 'bsd,dhq->bshq'."""
+    w = params["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = jnp.einsum(contract, x, w)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32) -> dict:
+    # fan-in scaled: keeps tied-logit variance O(1) at init
+    tbl = (jax.random.normal(key, (vocab, dim), jnp.float32)
+           / np.sqrt(dim)).astype(dtype)
+    return {"table": P_(tbl, ("vocab", "embed"))}
+
+
+def embedding_lookup(params: dict, tokens: jnp.ndarray,
+                     compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    out = params["table"].astype(compute_dtype)[tokens]
+    return constrain(out, ("batch", "seq", "embed_act"))
+
+
+def embedding_logits(params: dict, x: jnp.ndarray,
+                     compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    tbl = params["table"].astype(compute_dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(compute_dtype), tbl)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    B, S, H, D = x.shape
+    half = D // 2
+    freqs = 1.0 / (theta ** (np.arange(half, dtype=np.float32) * 2.0 / D))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,281 @@
+"""The unified decoder-only LM covering all 10 assigned architectures.
+
+The layer stack is a `lax.scan` over `cfg.repeats` copies of the block unit
+(params stacked on a leading `stack` axis) — HLO size is depth-independent,
+which keeps 512-device lowering tractable. Modality stubs (vlm/audio) enter
+as precomputed prefix embeddings with prefix-LM attention.
+
+Entry points:
+  init(key, cfg)                         -> (params, logical-axes tree)
+  forward(params, cfg, tokens, prefix)   -> logits
+  loss(params, cfg, batch)               -> (scalar, metrics)
+  prefill(params, cfg, tokens, max_len)  -> (last_logits, caches)
+  decode_step(params, cfg, token, caches)-> (logits, caches)
+  init_caches(cfg, batch, max_len)       -> caches (for dry-run serve_step)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.nn import attention, blocks, mamba2
+from repro.nn.layers import embedding_init, embedding_logits, embedding_lookup
+from repro.nn.layers import rmsnorm_apply, rmsnorm_init
+from repro.nn.sharding import P_, constrain, unzip
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // 256) * 256
+
+
+def _is_p(x):
+    return isinstance(x, P_)
+
+
+def _stack_trees(trees):
+    """Stack per-repeat P_ trees along a new leading `stack` axis."""
+    return jax.tree_util.tree_map(
+        lambda *ps: P_(jnp.stack([q.value for q in ps]),
+                       ("stack",) + tuple(ps[0].axes)),
+        *trees, is_leaf=_is_p)
+
+
+def init(key, cfg: ModelConfig):
+    """Returns (param values, logical-axes tree)."""
+    dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+    keys = jax.random.split(key, cfg.repeats * len(cfg.unit) + 3)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(keys[-1], padded_vocab(cfg), cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = embedding_init(keys[-2], padded_vocab(cfg), cfg.d_model,
+                                      dtype)
+    units = []
+    ki = 0
+    for _ in range(cfg.repeats):
+        unit_p = {}
+        for u, spec in enumerate(cfg.unit):
+            unit_p[f"u{u}"] = blocks.block_init(keys[ki], cfg, spec)
+            ki += 1
+        units.append(unit_p)
+    p["blocks"] = _stack_trees(units)
+    return unzip(p)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "nothing":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def _embed_inputs(params, cfg, tokens, prefix_embeds, adt):
+    x = embedding_lookup(params["embed"], tokens, adt)
+    if cfg.prefix_len and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(adt), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """tokens: (B, S) -> logits (B, S, padded_vocab) over the *text* positions."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    x, positions = _embed_inputs(params, cfg, tokens, prefix_embeds, adt)
+    pfx = cfg.prefix_len if prefix_embeds is not None else 0
+
+    def unit_body(x, unit_params):
+        aux_acc = jnp.zeros((2,), jnp.float32)
+        for u, spec in enumerate(cfg.unit):
+            x, aux = blocks.block_forward(unit_params[f"u{u}"], cfg, spec, x,
+                                          positions, prefix_len=pfx)
+            if aux:
+                aux_acc = aux_acc + jnp.stack(
+                    [aux["load_balance"], aux["dropped_frac"]])
+        return x, aux_acc
+
+    body = _remat(unit_body, cfg)
+    x, aux = jax.lax.scan(body, x, params["blocks"],
+                          unroll=cfg.repeats if cfg.scan_unroll else 1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = embedding_logits(table, x, adt)
+    if pfx:
+        logits = logits[:, pfx:]
+    return logits, aux.mean(axis=0)
+
+
+def _backbone(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """Everything up to the final norm. Returns (hidden, aux, pfx)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    x, positions = _embed_inputs(params, cfg, tokens, prefix_embeds, adt)
+    pfx = cfg.prefix_len if prefix_embeds is not None else 0
+
+    def unit_body(x, unit_params):
+        aux_acc = jnp.zeros((2,), jnp.float32)
+        for u, spec in enumerate(cfg.unit):
+            x, aux = blocks.block_forward(unit_params[f"u{u}"], cfg, spec, x,
+                                          positions, prefix_len=pfx)
+            if aux:
+                aux_acc = aux_acc + jnp.stack(
+                    [aux["load_balance"], aux["dropped_frac"]])
+        return x, aux_acc
+
+    body = _remat(unit_body, cfg)
+    x, aux = jax.lax.scan(body, x, params["blocks"],
+                          unroll=cfg.repeats if cfg.scan_unroll else 1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, aux.mean(axis=0), pfx
+
+
+def chunked_softmax_stats(x, table, labels, chunk: int):
+    """logsumexp + label logit over the vocab WITHOUT materializing (B,S,V).
+
+    Scans `chunk`-column slabs of the unembedding; each slab's logits live
+    only inside a rematerialized scan body (recomputed in the backward), so
+    peak logits memory and HLO bytes drop by V/chunk.
+    Returns (logz (B,S), label_logit (B,S)).
+    """
+    V, D = table.shape
+    assert V % chunk == 0, (V, chunk)
+    nv = V // chunk
+    slabs = table.reshape(nv, chunk, D)
+    bases = jnp.arange(nv, dtype=jnp.int32) * chunk
+    xf = x.astype(jnp.bfloat16)
+
+    def body(carry, slab_base):
+        m, s, lab = carry
+        slab, base = slab_base
+        # bf16 slab logits: halves the dominant logit bytes; the f32 upcast
+        # fuses into the max/exp consumers (i2 of the T1 hillclimb)
+        lg = jnp.einsum("bsd,vd->bsv", xf, slab.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.bfloat16).astype(jnp.float32)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            lg - m_new[..., None]).sum(axis=-1)
+        rel = labels - base
+        hit = (rel >= 0) & (rel < chunk)
+        picked = jnp.take_along_axis(
+            lg, jnp.clip(rel, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        lab = lab + jnp.where(hit, picked, 0.0)
+        return (m_new, s, lab), None
+
+    B, S = labels.shape
+    init = (jnp.full((B, S), -1e30, jnp.float32),
+            jnp.zeros((B, S), jnp.float32), jnp.zeros((B, S), jnp.float32))
+    (m, s, lab), _ = jax.lax.scan(jax.checkpoint(body), init, (slabs, bases))
+    return jnp.log(s) + m, lab
+
+
+def loss(params, cfg: ModelConfig, batch, *, z_loss: float = 1e-4,
+         moe_loss_weight: float = 0.01):
+    """Next-token CE. batch: {tokens: (B,S) int32, prefix?: (B,P,D)}."""
+    tokens = batch["tokens"]
+    labels = tokens[:, 1:]
+    if cfg.ce_chunk_vocab:
+        x, aux, pfx = _backbone(params, cfg, tokens, batch.get("prefix"))
+        x = x[:, pfx:] if pfx else x
+        table = (params["unembed"] if not cfg.tie_embeddings
+                 else params["embed"])["table"]
+        logz, label_logit = chunked_softmax_stats(
+            x[:, :-1], table, labels, cfg.ce_chunk_vocab)
+    else:
+        logits, aux = forward(params, cfg, tokens, batch.get("prefix"))
+        lg = logits[:, :-1].astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        label_logit = jnp.take_along_axis(lg, labels[..., None],
+                                          axis=-1)[..., 0]
+    ce = (logz - label_logit).mean()
+    total = ce + z_loss * (logz ** 2).mean()
+    if cfg.n_experts:
+        total = total + moe_loss_weight * aux[0]
+    metrics = {"ce": ce, "load_balance": aux[0], "dropped_frac": aux[1]}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-step decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Stacked (over repeats) per-unit caches, matching the scan layout."""
+    per_unit = {}
+    for u, spec in enumerate(cfg.unit):
+        if spec.kind == "attn":
+            c = attention.init_cache(cfg, batch, max_len, dtype)
+        else:
+            c = mamba2.init_mamba_cache(cfg, batch)
+        per_unit[f"u{u}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape), c)
+    return per_unit
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            prefix_embeds=None, cache_dtype=jnp.bfloat16):
+    """Run the full prompt, build decode caches. Returns (last_logits, caches)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    x, positions = _embed_inputs(params, cfg, tokens, prefix_embeds, adt)
+    pfx = cfg.prefix_len if prefix_embeds is not None else 0
+    B, S, _ = x.shape
+    if max_len < S:
+        raise ValueError(f"cache max_len={max_len} < prompt length {S} "
+                         f"(remember to include prefix_len={pfx})")
+
+    def unit_body(x, unit_params):
+        caches = {}
+        for u, spec in enumerate(cfg.unit):
+            x, cache = blocks.block_prefill(unit_params[f"u{u}"], cfg, spec, x,
+                                            positions, prefix_len=pfx)
+            if spec.kind == "attn":
+                k, v = cache
+                pad = max_len - S
+                kc = jnp.pad(k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+                caches[f"u{u}"] = attention.KVCache(
+                    k=kc, v=vc, length=jnp.asarray(S, jnp.int32))
+            else:
+                caches[f"u{u}"] = cache
+        return x, caches
+
+    x, caches = jax.lax.scan(unit_body, x, params["blocks"],
+                             unroll=cfg.repeats if cfg.scan_unroll else 1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = embedding_logits(table, x[:, -1:], adt)
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches):
+    """token: (B, 1) int32. Returns (logits (B, pv), new caches)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    x = embedding_lookup(params["embed"], token, adt)
+
+    def unit_body(x, scanned):
+        unit_params, unit_caches = scanned
+        new_caches = {}
+        for u, spec in enumerate(cfg.unit):
+            x, new_caches[f"u{u}"] = blocks.block_decode(
+                unit_params[f"u{u}"], cfg, spec, x, unit_caches[f"u{u}"])
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(unit_body, x, (params["blocks"], caches),
+                                 unroll=cfg.repeats if cfg.scan_unroll else 1)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    table = params["unembed"] if not cfg.tie_embeddings else params["embed"]
+    logits = embedding_logits(table, x, adt)
+    return logits[:, 0], new_caches
+
+
+def mask_pad_logits(cfg: ModelConfig, logits):
+    """-inf the padded vocab tail before sampling."""
+    pv = logits.shape[-1]
+    ids = jnp.arange(pv)
+    return jnp.where(ids[None, :] < cfg.vocab, logits, -1e30)

@@ -1,0 +1,232 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked parallel form.
+
+Implements the SSD algorithm of Mamba-2 [arXiv:2405.21060]: the sequence is
+cut into chunks; within a chunk the recurrence is evaluated as a masked
+attention-like quadratic (MXU-friendly), across chunks a small state
+(B, H, N, P) is carried by a scan. Decode is the O(1) recurrent step.
+
+Layout notes (TPU adaptation): heads shard over `model`; the chunk dimension
+keeps einsums at MXU-aligned sizes (chunk=256); all decay math in f32.
+Depthwise causal conv (d_conv=4) is evaluated as 4 shifted multiply-adds —
+no conv primitive, no im2col.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.layers import linear_apply, linear_init, rmsnorm_apply, rmsnorm_init
+from repro.nn.sharding import P_, constrain
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_inner + 2N) — last inputs to the conv
+    state: jnp.ndarray  # (B, H, N, P) — SSM state
+    length: jnp.ndarray  # () int32
+
+
+def mamba_init(key, cfg) -> dict:
+    dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "wz": linear_init(ks[0], (D,), (di,), ("embed", "inner"), dtype=dtype),
+        "wx": linear_init(ks[1], (D,), (di,), ("embed", "inner"), dtype=dtype),
+        "wB": linear_init(ks[2], (D,), (N,), ("embed", None), dtype=dtype),
+        "wC": linear_init(ks[3], (D,), (N,), ("embed", None), dtype=dtype),
+        "wdt": linear_init(ks[4], (D,), (H,), ("embed", "ssm_heads"), dtype=dtype),
+        "out": linear_init(ks[5], (di,), (D,), ("inner", "embed"), dtype=dtype),
+        # depthwise causal conv over the concatenated (x, B, C) channels
+        "conv_w": P_(
+            (jax.random.normal(ks[6], (cfg.ssm_conv, di + 2 * N), jnp.float32)
+             * (1.0 / np.sqrt(cfg.ssm_conv))).astype(dtype),
+            ("conv", "inner")),
+        "conv_b": P_(jnp.zeros((di + 2 * N,), dtype), ("inner",)),
+        "A_log": P_(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+                    ("ssm_heads",)),
+        "dt_bias": P_(jnp.full((H,), -2.0, jnp.float32), ("ssm_heads",)),
+        "D": P_(jnp.ones((H,), jnp.float32), ("ssm_heads",)),
+        "norm": rmsnorm_init(di, dtype),
+    }
+    return p
+
+
+def _depthwise_causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                           history: jnp.ndarray = None) -> jnp.ndarray:
+    """u: (B, S, C); w: (K, C). Causal: y_t = sum_k w[k] * u_{t-K+1+k}.
+    `history`: optional (B, K-1, C) left context (decode/chunked prefill)."""
+    K = w.shape[0]
+    if history is None:
+        hist = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        hist = history.astype(u.dtype)
+    ext = jnp.concatenate([hist, u], axis=1)  # (B, S+K-1, C)
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    S = u.shape[1]
+    for k in range(K):
+        y = y + ext[:, k : k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None,
+                 constrain_layout: bool = False):
+    """SSD scan. xh: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bm/Cm: (B,S,N). Returns (y: (B,S,H,P), final_state: (B,H,N,P))."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    a = (dt.astype(f32) * A.astype(f32)).reshape(Bsz, nc, chunk, H)
+    xb = (xh.astype(f32) * dt.astype(f32)[..., None]).reshape(Bsz, nc, chunk, H, P)
+    Bc = Bm.astype(f32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+    if constrain_layout:
+        # pin the O(S*c*H) decay/product tensors to (batch->data,
+        # heads->model); without this the partitioner replicates them
+        a = constrain(a, ("batch", None, None, "ssm_heads"))
+        xb = constrain(xb, ("batch", None, None, "ssm_heads", None))
+        Bc = constrain(Bc, ("batch", None, None, None))
+        Cc = constrain(Cc, ("batch", None, None, None))
+
+    cum = jnp.cumsum(a, axis=2)                      # (B,nc,c,H)
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xb_j
+    CB = jnp.einsum("bnim,bnjm->bnij", Cc, Bc)       # (B,nc,c,c)
+    Ldec = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: upper-triangle entries are +large (cum decreasing), and
+    # exp(inf)*0 in the cotangent would poison gradients
+    Ldec = jnp.where(tri[None, None, :, :, None], Ldec, -1e30)
+    L = jnp.exp(Ldec)
+    if constrain_layout:
+        L = constrain(L, ("batch", None, None, None, "ssm_heads"))
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", CB, L, xb)
+    if constrain_layout:
+        y_intra = constrain(y_intra, ("batch", None, None, "ssm_heads", None))
+
+    # chunk states: S_n = sum_j exp(cum_end - cum_j) B_j (x) xb_j
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,c,H)
+    states = jnp.einsum("bnjm,bnjh,bnjhp->bnhmp", Bc, dec_end, xb)  # (B,nc,H,N,P)
+
+    # inter-chunk recurrence
+    g = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H) total chunk decay
+    R0 = (jnp.zeros((Bsz, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(R, inp):
+        g_n, S_n = inp                               # (B,H), (B,H,N,P)
+        R_new = R * g_n[:, :, None, None] + S_n
+        return R_new, R                              # emit state *before* chunk
+
+    R_final, R_prevs = jax.lax.scan(
+        step, R0, (jnp.moveaxis(g, 1, 0), jnp.moveaxis(states, 1, 0)))
+    R_prev = jnp.moveaxis(R_prevs, 0, 1)             # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bnim,bnih,bnhmp->bnihp", Cc, jnp.exp(cum), R_prev)
+    y = (y_intra + y_inter).reshape(Bsz, nc * chunk, H, P)[:, :S]
+    return y.astype(xh.dtype), R_final
+
+
+def mamba_forward(params, cfg, x, *, init_cache: MambaCache = None,
+                  return_cache: bool = False):
+    """Train/prefill forward. x: (B, S, D)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    B, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = linear_apply(params["wz"], x, "bsd,de->bse", compute_dtype=adt)
+    xs = linear_apply(params["wx"], x, "bsd,de->bse", compute_dtype=adt)
+    Bm = linear_apply(params["wB"], x, "bsd,dn->bsn", compute_dtype=adt)
+    Cm = linear_apply(params["wC"], x, "bsd,dn->bsn", compute_dtype=adt)
+    dt_raw = linear_apply(params["wdt"], x, "bsd,dh->bsh", compute_dtype=adt)
+
+    u_pre = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    hist = init_cache.conv if init_cache is not None else None
+    u = _depthwise_causal_conv(u_pre, params["conv_w"], params["conv_b"], hist)
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(adt)
+    xs, Bm, Cm = u[..., :di], u[..., di : di + N], u[..., di + N :]
+    xs = constrain(xs, ("batch", "seq", "inner"))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, H, P)
+    if cfg.ssd_constrain:
+        xh = constrain(xh, ("batch", "seq", "ssm_heads", None))
+        dt = constrain(dt, ("batch", "seq", "ssm_heads"))
+    init_state = init_cache.state if init_cache is not None else None
+    y, final_state = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, init_state,
+                                  constrain_layout=cfg.ssd_constrain)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                                      ).astype(y.dtype),
+                      cfg.norm_eps)
+    out = linear_apply(params["out"], y, "bse,ed->bsd", compute_dtype=adt)
+    out = constrain(out, ("batch", "seq", "embed_act"))
+    if return_cache:
+        # conv history = the *pre-conv* projection values of the last K-1 steps
+        cache = MambaCache(conv=u_pre[:, S - (cfg.ssm_conv - 1):],
+                           state=final_state,
+                           length=jnp.asarray(S, jnp.int32))
+        return out, cache
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> MambaCache:
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+        state=jnp.zeros((batch, H, N, P), jnp.float32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mamba_decode(params, cfg, x, cache: MambaCache):
+    """Single-token decode. x: (B, 1, D). Returns (y, new_cache)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = linear_apply(params["wz"], x, "bsd,de->bse", compute_dtype=adt)
+    pre = jnp.concatenate([
+        linear_apply(params["wx"], x, "bsd,de->bse", compute_dtype=adt),
+        linear_apply(params["wB"], x, "bsd,dn->bsn", compute_dtype=adt),
+        linear_apply(params["wC"], x, "bsd,dn->bsn", compute_dtype=adt),
+    ], axis=-1)                                       # (B, 1, di+2N)
+    dt_raw = linear_apply(params["wdt"], x, "bsd,dh->bsh", compute_dtype=adt)
+
+    window = jnp.concatenate([cache.conv.astype(adt), pre], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(jnp.float32)
+    u = (window.astype(jnp.float32) * w[None]).sum(axis=1, keepdims=True)
+    u = u + params["conv_b"].astype(jnp.float32)
+    u = jax.nn.silu(u).astype(adt)
+    xs, Bm, Cm = u[..., :di], u[..., di : di + N], u[..., di + N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    g = jnp.exp(dt * A)                               # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bf, Cf = Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bm,bh,bhp->bhmp", Bf, dt, xh)
+    state = cache.state * g[:, :, None, None] + upd
+    y = jnp.einsum("bm,bhmp->bhp", Cf, state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(adt)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                                      ).astype(y.dtype),
+                      cfg.norm_eps)
+    out = linear_apply(params["out"], y, "bse,ed->bsd", compute_dtype=adt)
+    new_cache = MambaCache(conv=window[:, 1:].astype(cache.conv.dtype),
+                           state=state, length=cache.length + 1)
+    return out, new_cache

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts FFN with capacity-based token dropping (GShard-style
+semantics, gather/scatter implementation).
+
+Dispatch avoids the (T, E, C) one-hot dispatch tensor (intractable at
+Kimi-K2 scale: 1M tokens × 384 experts). Instead:
+
+1. top-k routing over the softmax'd router logits;
+2. each assignment's *rank within its expert* via a per-slot cumsum of
+   (T, E) one-hots — peak memory O(T·E) int32 per slot, k slots processed
+   sequentially;
+3. scatter-add of token activations into an (E·C, D) buffer (slots above
+   capacity C are dropped — `mode='drop'` keeps the scatter in-bounds);
+4. per-expert batched matmuls (E, C, D)×(E, D, F) — the EP dimension;
+5. gather back + gate-weighted combine.
+
+Sharding: expert weights (experts→model, embed→data); the dispatch buffer
+(experts→model); token activations (batch→data). Under pjit the
+scatter/gather across those shardings lowers to the expected all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.layers import linear_init
+from repro.nn.sharding import P_, constrain
+
+
+def moe_init(key, cfg) -> dict:
+    dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+    D, F, E = cfg.d_model, cfg.resolved_expert_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    def w(k, shape, axes):
+        fan_in = shape[1]
+        v = (jax.random.truncated_normal(k, -2., 2., shape, jnp.float32)
+             / np.sqrt(fan_in)).astype(dtype)
+        return P_(v, axes)
+    p = {
+        "router": linear_init(ks[0], (D,), (E,), ("embed", "experts"),
+                              dtype=jnp.float32),
+        "w_in": w(ks[1], (E, D, F), ("experts", "embed", "expert_mlp")),
+        "w_out": w(ks[3], (E, F, D), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = w(ks[2], (E, D, F), ("experts", "embed", "expert_mlp"))
+    return p
+
+
+def _capacity(cfg, T: int) -> int:
+    c = int(np.ceil(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    # 128-aligned: MXU-friendly and divisible by any data-axis size we use
+    return max(8, -(-c // 128) * 128) if c > 8 else 8
+
+
+def moe_forward(params, cfg, x):
+    """x: (B, S, D) -> (B, S, D), plus aux losses dict."""
+    if cfg.moe_dispatch == "gathered_decode" and \
+            x.shape[0] * x.shape[1] <= max(cfg.n_experts // cfg.top_k, 4):
+        # OPT-IN small-batch decode path: computes exactly T*K expert slots
+        # (vs E*C capacity slots — jamba long_500k burned 30x useful FLOPs).
+        # Only a win when expert weights are replicated or host-resident:
+        # under EP sharding the per-token weight gather all-gathers experts
+        # across `model` and the collective term explodes (§Perf, refuted
+        # for the sharded setting — measured 3.5 ms -> 220 ms).
+        return _moe_forward_gathered(params, cfg, x)
+    if cfg.moe_dispatch == "grouped" and x.shape[1] > 1:
+        return moe_forward_grouped(params, cfg, x)
+    return _moe_forward_global(params, cfg, x)
+
+
+def _moe_forward_gathered(params, cfg, x):
+    """Weight-gather MoE for tiny T: flops = T*K expert slots exactly;
+    bytes = streaming the K routed experts' weights (the decode roof)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(-1, D)                                        # (T, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1) if cfg.router_softmax else \
+        jax.nn.sigmoid(logits)
+    gate_vals, top_idx = jax.lax.top_k(probs, K)                 # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    w_in = params["w_in"].astype(adt)[top_idx]                   # (T, K, D, F)
+    w_out = params["w_out"].astype(adt)[top_idx]                 # (T, K, F, D)
+    h = jnp.einsum("td,tkdf->tkf", xt.astype(adt), w_in)
+    if cfg.mlp_gated:
+        w_gate = params["w_gate"].astype(adt)[top_idx]
+        g = jnp.einsum("td,tkdf->tkf", xt.astype(adt), w_gate)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(adt) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(adt)
+    y = jnp.einsum("tkf,tkfd->tkd", h, w_out)                    # (T, K, D)
+    out = jnp.einsum("tkd,tk->td", y, gate_vals.astype(adt)).reshape(B, S, D)
+
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32).mean(axis=0)
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "dropped_frac": jnp.zeros((), jnp.float32)}           # never drops
+    return out, aux
+
+
+def _moe_forward_global(params, cfg, x):
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = _capacity(cfg, T)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1) if cfg.router_softmax else \
+        jax.nn.sigmoid(logits)
+    gate_vals, top_idx = jax.lax.top_k(probs, K)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)           # renormalize top-k
+
+    # --- rank within expert (slot-major order), O(T*E) per slot ------------
+    counts = jnp.zeros((E,), jnp.int32)
+    ranks = []
+    for k in range(K):
+        oh = jax.nn.one_hot(top_idx[:, k], E, dtype=jnp.int32)   # (T, E)
+        oh = constrain(oh, ("batch", None))
+        within = jnp.cumsum(oh, axis=0) - oh                     # exclusive
+        rank_k = jnp.take_along_axis(within, top_idx[:, k:k+1], axis=1)[:, 0]
+        ranks.append(rank_k + counts[top_idx[:, k]])
+        counts = counts + oh.sum(axis=0)
+    rank = jnp.stack(ranks, axis=1)                              # (T, K)
+
+    keep = rank < C                                              # (T, K) drop mask
+    slot = top_idx * C + jnp.minimum(rank, C - 1)                # (T, K)
+
+    # --- dispatch: scatter-add tokens into the (E*C, D) buffer -------------
+    flat_slot = slot.reshape(T * K)
+    flat_keep = keep.reshape(T * K)
+    src = jnp.repeat(xt.astype(adt), K, axis=0) * flat_keep[:, None].astype(adt)
+    buf = jnp.zeros((E * C, D), adt).at[flat_slot].add(
+        src, mode="drop")                                        # (E*C, D)
+    buf = constrain(buf.reshape(E, C, D), ("experts", "capacity", "embed_act"))
+
+    # --- expert FFN (the EP einsums) ---------------------------------------
+    w_in = params["w_in"].astype(adt)
+    w_out = params["w_out"].astype(adt)
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(adt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(adt) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(adt)
+    h = constrain(h, ("experts", "capacity", "expert_mlp"))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, w_out).reshape(E * C, D)
+
+    # --- combine: gather back, gate-weight, sum over k ----------------------
+    gathered = y_buf[flat_slot].reshape(T, K, D)
+    w = (gate_vals * keep.astype(gate_vals.dtype)).astype(adt)   # (T, K)
+    out = jnp.einsum("tkd,tk->td", gathered, w).reshape(B, S, D)
+    out = constrain(out, ("batch", "seq", "embed_act"))
+
+    # --- aux: load-balance loss (Switch-style) ------------------------------
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = jax.nn.one_hot(top_idx[:, 0], E, dtype=jnp.float32).mean(axis=0)
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep.astype(jnp.float32).mean()}
+    return out, aux
+
+
+def moe_forward_grouped(params, cfg, x):
+    """Grouped dispatch (GShard `group_size` pattern): each batch row ranks
+    and buffers its own tokens, so the dispatch scatter touches only the
+    row's shard — no cross-data-shard reduction of the expert buffer.
+    Verified §Perf iteration: on dbrx train_4k it removes the 12.7 TB/device
+    dispatch all-reduce. Capacity is per (row, expert): slightly higher drop
+    rate at equal capacity_factor (recorded in aux).
+    """
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.activation_dtype]
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)                                       # per-row capacity
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1) if cfg.router_softmax else \
+        jax.nn.sigmoid(logits)
+    gate_vals, top_idx = jax.lax.top_k(probs, K)                # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-row rank within expert (cumsum over the row's tokens only)
+    counts = jnp.zeros((B, E), jnp.int32)
+    ranks = []
+    for k in range(K):
+        oh = jax.nn.one_hot(top_idx[:, :, k], E, dtype=jnp.int32)   # (B,S,E)
+        within = jnp.cumsum(oh, axis=1) - oh
+        rank_k = jnp.take_along_axis(
+            within, top_idx[:, :, k : k + 1], axis=2)[..., 0]
+        prev = jnp.take_along_axis(counts, top_idx[:, :, k], axis=1)
+        ranks.append(rank_k + prev)
+        counts = counts + oh.sum(axis=1)
+    rank = jnp.stack(ranks, axis=-1)                            # (B, S, K)
+
+    keep = rank < C
+    slot = top_idx * C + jnp.minimum(rank, C - 1)               # (B, S, K)
+
+    src = (jnp.repeat(x.astype(adt), K, axis=1).reshape(B, S, K, D)
+           * keep[..., None].astype(adt)).reshape(B, S * K, D)
+    flat_slot = slot.reshape(B, S * K)
+
+    def row_scatter(buf_b, slot_b, src_b):
+        return buf_b.at[slot_b].add(src_b, mode="drop")
+
+    buf = jax.vmap(row_scatter)(jnp.zeros((B, E * C, D), adt),
+                                flat_slot, src)                 # (B, E*C, D)
+    buf = constrain(buf.reshape(B, E, C, D),
+                    ("batch", "experts", None, "embed_act"))
+
+    w_in = params["w_in"].astype(adt)
+    w_out = params["w_out"].astype(adt)
+    h = jnp.einsum("becd,edf->becf", buf, w_in)
+    if cfg.mlp_gated:
+        g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(adt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(adt) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(adt)
+    h = constrain(h, ("batch", "experts", None, "expert_mlp"))
+    y_buf = jnp.einsum("becf,efd->becd", h, w_out).reshape(B, E * C, D)
+
+    gathered = jax.vmap(lambda yb, sb: yb[sb])(y_buf, flat_slot)
+    gathered = gathered.reshape(B, S, K, D)
+    w = (gate_vals * keep.astype(gate_vals.dtype)).astype(adt)
+    out = jnp.einsum("bskd,bsk->bsd", gathered, w)
+    out = constrain(out, ("batch", "seq", "embed_act"))
+
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = {"load_balance": E * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep.astype(jnp.float32).mean()}
+    return out, aux

@@ -1,0 +1,173 @@
+"""Logical-axis sharding (MaxText-style) for params and activations.
+
+Parameters are initialized as :class:`P_` leaves carrying logical axis names;
+`unzip` splits them into a value tree and a `PartitionSpec` tree. Logical
+names map to mesh axes through `RULES`, with two safety properties:
+
+* a mesh axis is only assigned when it divides the dimension (else the next
+  candidate — ultimately replication — is used);
+* a mesh axis is never used twice within one spec (so fallback chains like
+  heads→model / head_dim→model compose correctly: whichever dim can take
+  "model" first wins, e.g. MQA with 1 kv head shards head_dim instead).
+
+The DP/FSDP/TP/EP mapping (DESIGN.md §5): batch→(pod, data), embed→data
+(FSDP/ZeRO-3: optimizer state inherits these specs), heads/mlp/experts/vocab
+→model (TP/EP). Decode-time KV-cache sharding is a semantic decision (heads
+vs sequence) made in :func:`kv_cache_axes`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis -> ordered mesh-axis candidates. A tuple entry means "combine
+# all of these that exist" (mega-axis, e.g. batch over pod+data).
+RULES: dict = {
+    "batch": (("pod", "data"),),
+    "seq": (),
+    "embed": ("data",),
+    "embed_act": (),                 # activations keep embed replicated
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),          # fallback target when heads don't divide
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    # EP+DP layout: expert dim over `model`, capacity slots over `data`(+`pod`
+    # on the multi-pod mesh — otherwise the second pod re-computes the full
+    # expert capacity and MoE compute does not scale past one pod; found via
+    # the multipod/singlepod FLOPs-ratio check, see EXPERIMENTS §Perf)
+    "capacity": (("data", "pod"), ("data",)),
+    "inner": ("model",),             # mamba d_inner
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "conv": (),
+    "stack": (),                     # scanned-layer dim
+    None: (),
+}
+
+
+@dataclasses.dataclass
+class P_:
+    """A parameter leaf: value + logical axis names (len == ndim)."""
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        assert len(self.axes) == self.value.ndim, (self.axes, self.value.shape)
+
+
+def _is_p(x):
+    return isinstance(x, P_)
+
+
+def unzip(tree):
+    """Tree of P_ -> (value tree, logical-axes tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_p)
+    axes = jax.tree_util.tree_map(lambda p: tuple(p.axes), tree, is_leaf=_is_p)
+    return values, axes
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], mesh: Mesh,
+                    rules: dict = RULES) -> PartitionSpec:
+    """Map logical axis names to a PartitionSpec under the given mesh."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    # Two passes: dims whose first candidate fits get priority; then fallbacks.
+    # (Simplicity: single pass is enough because fallback axes appear later in
+    # the spec only through the `used` check.)
+    for name in axes:
+        candidates = rules.get(name, ())
+        picked = None
+        for cand in candidates:
+            group = cand if isinstance(cand, tuple) else (cand,)
+            group = tuple(a for a in group if a in mesh_sizes and a not in used)
+            if not group:
+                continue
+            picked = group if len(group) > 1 else group[0]
+            break
+        out.append(picked)
+        if picked is not None:
+            for a in (picked if isinstance(picked, tuple) else (picked,)):
+                used.add(a)
+    # divisibility is enforced at spec-application time (see spec_for)
+    return PartitionSpec(*out)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh,
+             rules: dict = RULES) -> PartitionSpec:
+    """Like logical_to_spec but drops mesh axes that do not divide the dim."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        candidates = rules.get(name, ())
+        picked = None
+        for cand in candidates:
+            group = cand if isinstance(cand, tuple) else (cand,)
+            group = tuple(a for a in group if a in mesh_sizes and a not in used)
+            if not group:
+                continue
+            prod = 1
+            for a in group:
+                prod *= mesh_sizes[a]
+            if prod == 0 or dim % prod != 0:
+                # try the largest prefix that divides
+                while group and dim % prod != 0:
+                    prod //= mesh_sizes[group[-1]]
+                    group = group[:-1]
+                if not group:
+                    continue
+            picked = group if len(group) > 1 else group[0]
+            break
+        out.append(picked)
+        if picked is not None:
+            for a in (picked if isinstance(picked, tuple) else (picked,)):
+                used.add(a)
+    return PartitionSpec(*out)
+
+
+def param_sharding(values, axes, mesh: Mesh, rules: dict = RULES):
+    """Value tree + logical-axes tree -> NamedSharding tree."""
+    def one(v, ax):
+        return NamedSharding(mesh, spec_for(v.shape, ax, mesh, rules))
+    # axes leaves are tuples; tree_map flattens `axes` up to the structure of
+    # `values`, so the tuples arrive whole.
+    return jax.tree_util.tree_map(one, values, axes)
+
+
+def constrain(x: jnp.ndarray, axes: Sequence[Optional[str]],
+              mesh: Optional[Mesh] = None, rules: dict = RULES) -> jnp.ndarray:
+    """with_sharding_constraint by logical names (no-op outside a mesh ctx)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    env = jax._src.mesh.thread_resources.env  # the `with mesh:` context
+    m = env.physical_mesh
+    return None if m.empty else m
+
+
+def kv_cache_axes(cfg, mesh: Mesh) -> Tuple[Optional[str], ...]:
+    """(batch, seq, kv_heads, head_dim) cache: shard kv heads over `model`
+    when divisible, otherwise shard the *sequence* dim (flash-decode style —
+    pjit keeps the partial-softmax reduction exact)."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = mesh_sizes.get("model", 1)
+    if cfg.n_kv_heads and cfg.n_kv_heads % model == 0:
+        return ("batch", None, "kv_heads", None)
+    return ("batch", "kv_seq_model", None, None)
+
+
+# extra rule consumed by kv_cache_axes' fallback
+RULES["kv_seq_model"] = ("model",)

@@ -1,0 +1,1 @@
+"""Serving: prefill/decode engine with hash-based no-repeat-ngram sampling."""

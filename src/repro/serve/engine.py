@@ -1,0 +1,152 @@
+"""Batched serving engine: prefill + decode with hash-based no-repeat-ngram.
+
+`no_repeat_ngram` is the paper's rolling hash at serving time: per sequence
+we keep a tiny Bloom filter of the n-grams generated so far. At each step the
+*recursive* structure of CYCLIC gives the hash of every candidate
+continuation in O(vocab) bitwise ops — h_cand = rotl(h_prefix, 1) XOR
+h1[v] for all v simultaneously — so banning repeats costs one rotate, one
+XOR-broadcast and one Bloom probe per candidate, not a re-hash of the window.
+(Bloom false positives over-ban slightly; rate is set by log2_m.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import gf2, make_family
+from repro.nn import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0
+    top_k: int = 0                   # 0 = full softmax
+    no_repeat_ngram: int = 0         # 0 = disabled
+    bloom_log2_m: int = 14
+    seed: int = 0
+
+
+class NoRepeatNgram:
+    """Per-sequence Bloom state over generated n-gram fingerprints."""
+
+    def __init__(self, cfg: ModelConfig, scfg: SamplerConfig):
+        self.n = scfg.no_repeat_ngram
+        self.m = 1 << scfg.bloom_log2_m
+        self.fam = make_family("cyclic", n=self.n, L=32)
+        self.params = self.fam.init(jax.random.PRNGKey(scfg.seed + 99),
+                                    lm.padded_vocab(cfg))
+
+    def init_state(self, batch: int) -> Dict[str, jnp.ndarray]:
+        return {
+            # rolling hash of the last n-1 tokens, advanced recursively
+            "prefix_hash": jnp.zeros((batch,), jnp.uint32),
+            # h1 values of the last n-1 tokens (to expire the oldest term)
+            "window": jnp.zeros((batch, self.n - 1), jnp.uint32),
+            "bloom": jnp.zeros((batch, self.m // 32), jnp.uint32),
+            "count": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def banned(self, state) -> jnp.ndarray:
+        """(B, V) bool: would token v complete an already-seen n-gram?"""
+        h1 = self.params["h1"]                                   # (V,)
+        cand = gf2.rotl(state["prefix_hash"], 1, 32)[:, None] ^ h1[None, :]
+        ready = state["count"] >= (self.n - 1)
+        return self._bloom_probe(state["bloom"], cand) & ready[:, None]
+
+    def update(self, state, token: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Advance the rolling window with the sampled token (B,)."""
+        h1v = self.params["h1"][token]                           # (B,)
+        new_hash = gf2.rotl(state["prefix_hash"], 1, 32) ^ h1v
+        count = state["count"] + 1
+        # when the window is full, `new_hash` is a complete n-gram hash:
+        # record it, then expire the oldest symbol from the rolling prefix.
+        full = count >= self.n
+        bloom = jnp.where(full[:, None],
+                          self._bloom_add(state["bloom"], new_hash),
+                          state["bloom"])
+        # expire the oldest symbol once the window is full (recursive update)
+        oldest = state["window"][:, 0]
+        expired = new_hash ^ gf2.rotl(oldest, (self.n - 1) % 32, 32)
+        prefix = jnp.where(full, expired, new_hash)
+        window = jnp.concatenate(
+            [state["window"][:, 1:], h1v[:, None]], axis=1)
+        return {"prefix_hash": prefix, "window": window, "bloom": bloom,
+                "count": count}
+
+    def _probes(self, h: jnp.ndarray) -> jnp.ndarray:
+        h2 = h * np.uint32(0x9E3779B9) | np.uint32(1)
+        i = jnp.arange(2, dtype=jnp.uint32)
+        return (h[..., None] + i * h2[..., None]) & np.uint32(self.m - 1)
+
+    def _bloom_probe(self, bloom, h) -> jnp.ndarray:
+        p = self._probes(h)                                      # (B, V, 2)
+        word, bit = p >> np.uint32(5), p & np.uint32(31)
+        flat = word.reshape(word.shape[0], -1).astype(jnp.int32)
+        got = jnp.take_along_axis(bloom, flat, axis=1).reshape(word.shape)
+        return jnp.all((got >> bit) & 1 == 1, axis=-1)
+
+    def _bloom_add(self, bloom, h) -> jnp.ndarray:
+        p = self._probes(h)                                      # (B, 2)
+        word, bit = p >> np.uint32(5), p & np.uint32(31)
+        mask0 = jnp.zeros_like(bloom)
+        for j in range(p.shape[-1]):
+            onehot = (jnp.arange(bloom.shape[-1], dtype=jnp.uint32)[None, :]
+                      == word[:, j:j+1])
+            mask0 = mask0 | jnp.where(onehot,
+                                      np.uint32(1) << bit[:, j:j+1], 0)
+        return bloom | mask0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: SamplerConfig = SamplerConfig()):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.nrn = (NoRepeatNgram(cfg, scfg)
+                    if scfg.no_repeat_ngram >= 2 else None)
+        self._decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+
+    def generate(self, prompts: jnp.ndarray, max_new_tokens: int,
+                 prefix_embeds=None) -> Tuple[np.ndarray, Dict]:
+        cfg, scfg = self.cfg, self.scfg
+        B, P = prompts.shape
+        pfx = cfg.prefix_len if prefix_embeds is not None else 0
+        max_len = P + pfx + max_new_tokens
+        last_logits, caches = lm.prefill(self.params, cfg, prompts, max_len,
+                                         prefix_embeds)
+        key = jax.random.PRNGKey(scfg.seed)
+        nrn_state = None
+        if self.nrn is not None:
+            nrn_state = self.nrn.init_state(B)
+            for t in range(P):   # charge the filter with the prompt
+                nrn_state = self.nrn.update(nrn_state, prompts[:, t])
+        out = []
+        banned_count = 0
+        logits = last_logits
+        for step in range(max_new_tokens):
+            logits = lm.mask_pad_logits(cfg, logits.astype(jnp.float32))
+            if self.nrn is not None:
+                banned = self.nrn.banned(nrn_state)
+                banned = banned[:, : logits.shape[-1]]
+                banned_count += int(banned.sum())
+                logits = jnp.where(banned, -1e30, logits)
+            if scfg.top_k:
+                kth = jax.lax.top_k(logits, scfg.top_k)[0][:, -1:]
+                logits = jnp.where(logits < kth, -1e30, logits)
+            if scfg.temperature == 0.0:
+                token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                token = jax.random.categorical(
+                    sub, logits / scfg.temperature, axis=-1).astype(jnp.int32)
+            out.append(token)
+            if self.nrn is not None:
+                nrn_state = self.nrn.update(nrn_state, token)
+            logits, caches = self._decode(params=self.params,
+                                          token=token[:, None], caches=caches)
+        tokens = jnp.stack(out, axis=1)
+        return np.asarray(tokens), {"banned_candidates": banned_count}

@@ -1,0 +1,1 @@
+"""Training substrate: optimizers, train step, checkpointing, fault tolerance."""

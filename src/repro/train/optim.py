@@ -1,0 +1,157 @@
+"""Optimizers (AdamW, Adafactor) as pure pytree transforms with
+sharding-aware state.
+
+ZeRO-3 comes for free under pjit: optimizer states are created with the same
+logical axes as their parameters (factored Adafactor states drop the factored
+axis), so `launch/shardings.py` shards them across `data`+`model` exactly
+like the params — state is never replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable            # (params, param_axes) -> (state, state_axes)
+    update: Callable          # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        prog = jnp.clip((step - self.warmup_steps) /
+                        max(self.decay_steps - self.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+        return self.peak_lr * warm * (self.min_ratio + (1 - self.min_ratio) * cos)
+
+
+def adamw(schedule: Schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          max_grad_norm=1.0) -> Optimizer:
+    def init(params, param_axes):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+        }
+        state_axes = {"mu": param_axes, "nu": param_axes}
+        return state, state_axes
+
+    def update(grads, state, params, step):
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            step_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m_new, v_new
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": mu, "nu": nu}, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(schedule: Schedule, eps=1e-30, clip_threshold=1.0,
+              decay_adamant=0.8, max_grad_norm=1.0,
+              min_dim_size_to_factor=128) -> Optimizer:
+    """Factored second moments (rows/cols) for params with >=2 large dims —
+    O(n+m) state instead of O(nm); the enabler for 1T-param training within
+    a 16 GB/chip budget (see DESIGN.md §8)."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and \
+            p.shape[-2] >= min_dim_size_to_factor
+
+    def init(params, param_axes):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        def st_axes(p, ax):
+            if _factored(p):
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2]) + (ax[-1],)}
+            return {"v": tuple(ax)}
+
+        state = jax.tree_util.tree_map(st, params)
+        state_axes = jax.tree_util.tree_map(st_axes, params, param_axes,
+                                            is_leaf=lambda x: not isinstance(x, dict))
+        return state, state_axes
+
+    def update(grads, state, params, step):
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_adamant)
+
+        def upd(g, s, p):
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom_r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                pre = g / (jnp.sqrt(denom_r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                           + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                pre = g / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(pre * pre) + eps)
+            pre = pre / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * pre).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_state = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return new_params, new_state, {"grad_norm": gn, "lr": lr}
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, schedule: Optional[Schedule] = None) -> Optimizer:
+    schedule = schedule or Schedule()
+    if name == "adamw":
+        return adamw(schedule)
+    if name == "adafactor":
+        return adafactor(schedule)
+    raise KeyError(name)

@@ -1,0 +1,98 @@
+"""train_step / serve_step factories — the functions the launcher lowers.
+
+`make_train_step(cfg)` returns (init_state_fn, train_step_fn):
+  state = {params, opt, step}
+  train_step(state, batch) -> (state, metrics)
+
+Features: microbatch gradient accumulation (lax.scan), optional int8
+cross-pod gradient compression (shard_map over the `pod` axis), remat policy
+from the config (applied inside the model's layer scan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import lm
+from repro.train import compress
+from repro.train.optim import Schedule, make_optimizer
+
+
+def init_state(key, cfg: ModelConfig, schedule: Optional[Schedule] = None):
+    """Returns (state, state_axes) — axes trees mirror the state pytree."""
+    params, param_axes = lm.init(key, cfg)
+    opt = make_optimizer(cfg.optimizer, schedule)
+    opt_state, opt_axes = opt.init(params, param_axes)
+    state = {"params": params, "opt": opt_state,
+             "step": jnp.zeros((), jnp.int32)}
+    axes = {"params": param_axes, "opt": opt_axes, "step": ()}
+    return state, axes
+
+
+def make_train_step(cfg: ModelConfig, schedule: Optional[Schedule] = None, *,
+                    num_microbatches: int = 1,
+                    grad_compression: Optional[str] = None):
+    opt = make_optimizer(cfg.optimizer, schedule)
+
+    def loss_fn(params, batch):
+        return lm.loss(params, cfg, batch)
+
+    def compute_grads(params, batch):
+        if num_microbatches == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return l, metrics, grads
+        # gradient accumulation over microbatches (sequential scan)
+        def split(x):
+            B = x.shape[0]
+            return x.reshape((num_microbatches, B // num_microbatches) + x.shape[1:])
+        mb = jax.tree_util.tree_map(split, batch)
+
+        def body(acc, mbatch):
+            (l, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mbatch)
+            acc_l, acc_m, acc_g = acc
+            acc_g = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+            acc_m = jax.tree_util.tree_map(lambda a, m: a + m, acc_m, metrics)
+            return (acc_l + l, acc_m, acc_g), None
+
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zero_m = {"ce": 0.0, "load_balance": 0.0, "dropped_frac": 0.0}
+        (l, metrics, grads), _ = jax.lax.scan(body, (0.0, zero_m, zero_g), mb)
+        scale = 1.0 / num_microbatches
+        return (l * scale,
+                jax.tree_util.tree_map(lambda m: m * scale, metrics),
+                jax.tree_util.tree_map(lambda g: g * scale, grads))
+
+    def train_step(state, batch):
+        l, metrics, grads = compute_grads(state["params"], batch)
+        if grad_compression == "int8_pod":
+            grads = compress.compress_pod_gradients(grads)
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {**metrics, **opt_metrics, "loss": l}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Single-token decode step for the dry-run / serving engine."""
+    def serve_step(params, token, caches):
+        logits, caches = lm.decode_step(params, cfg, token, caches)
+        return logits, caches
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, tokens, prefix=None):
+        return lm.prefill(params, cfg, tokens, max_len, prefix)
+    return prefill_step

@@ -1,0 +1,74 @@
+"""Config registry + recommended-override integrity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.configs.registry import (ARCHS, ASSIGNED, RECOMMENDED, get_config,
+                                    get_recommended_config, is_subquadratic,
+                                    shape_applicable)
+
+
+def test_all_assigned_archs_present():
+    assert len(ASSIGNED) == 10
+    for a in ASSIGNED:
+        assert isinstance(get_config(a), ModelConfig)
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-17")
+
+
+def test_shape_table_matches_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].tokens == 32768 * 32
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_subquadratic_flags():
+    assert is_subquadratic(get_config("mamba2-2.7b"))
+    assert is_subquadratic(get_config("jamba-1.5-large-398b"))
+    assert not is_subquadratic(get_config("qwen3-4b"))
+    assert not shape_applicable(get_config("phi3-mini-3.8b"),
+                                SHAPES["long_500k"])
+    assert shape_applicable(get_config("mamba2-2.7b"), SHAPES["long_500k"])
+
+
+def test_recommended_configs_constructible():
+    for a in ASSIGNED:
+        cfg = get_recommended_config(a)
+        assert cfg.param_count() == get_config(a).param_count()  # same model
+        for k, v in RECOMMENDED.get(a, {}).items():
+            assert getattr(cfg, k) == v
+
+
+def test_recommended_config_smoke_step():
+    """A recommended-override config must still train (grouped MoE + remat
+    full + microbatches all active)."""
+    from repro.train.step import init_state, make_train_step
+    cfg = dataclasses.replace(
+        get_recommended_config("dbrx-132b").smoke(), num_microbatches=2)
+    state, _ = init_state(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab)
+    step = jax.jit(make_train_step(cfg, num_microbatches=cfg.num_microbatches))
+    state, metrics = step(state, {"tokens": toks})
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state["step"]) == 1
+
+
+def test_block_units_cover_n_layers():
+    for a in ASSIGNED:
+        cfg = get_config(a)
+        assert len(cfg.layer_specs()) == cfg.n_layers
+        assert cfg.repeats * len(cfg.unit) == cfg.n_layers
+
+
+def test_smoke_configs_are_small():
+    for a in ASSIGNED:
+        s = get_config(a).smoke()
+        assert s.param_count() < 5e6, (a, s.param_count())

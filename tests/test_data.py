@@ -1,0 +1,103 @@
+"""Data plane: dedup recall/precision on planted duplicates, Bloom decontam,
+HLL telemetry accuracy, deterministic-resume pipeline."""
+import numpy as np
+import pytest
+
+from repro.data.corpus import CorpusSpec, bench_corpus, documents, zipf_tokens
+from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.data.decontam import DecontamConfig, Decontaminator
+from repro.data.pipeline import DataPlane, PipelineConfig
+from repro.data.stats import NgramStats, StatsConfig
+
+
+def test_bench_corpus_shape_and_distribution():
+    c = bench_corpus(100_000, seed=1)
+    assert c.shape == (100_000,) and c.dtype == np.int32
+    # space should be the most frequent symbol, 'e' next among letters
+    vals, counts = np.unique(c, return_counts=True)
+    top = vals[np.argmax(counts)]
+    assert top == ord(" ")
+
+
+def test_documents_plant_duplicates():
+    spec = CorpusSpec(n_docs=200, dup_rate=0.3, seed=3)
+    docs, dup_of = documents(spec)
+    assert len(docs) == 200
+    assert (dup_of >= 0).sum() > 30
+    i = int(np.argmax(dup_of >= 0))
+    src = dup_of[i]
+    a, b = docs[i], docs[src]
+    assert a.shape == b.shape and (a == b).mean() > 0.9
+
+
+def test_minhash_dedup_recall_precision():
+    spec = CorpusSpec(n_docs=300, dup_rate=0.25, mutate_frac=0.01, seed=5,
+                      vocab=8192)
+    docs, dup_of = documents(spec)
+    dd = MinHashDeduper(DedupConfig(vocab=8192, threshold=0.5))
+    flagged = np.zeros(len(docs), bool)
+    for i, d in enumerate(docs):
+        is_dup, _, _ = dd.check_and_add(d)
+        flagged[i] = is_dup
+    truth = dup_of >= 0
+    recall = (flagged & truth).sum() / max(truth.sum(), 1)
+    precision = (flagged & truth).sum() / max(flagged.sum(), 1)
+    assert recall > 0.9, recall
+    assert precision > 0.9, precision
+
+
+def test_decontaminator_flags_eval_overlap():
+    rng = np.random.default_rng(0)
+    eval_set = rng.integers(0, 1 << 16, size=(4, 256)).astype(np.int32)
+    clean = rng.integers(0, 1 << 16, size=(4, 256)).astype(np.int32)
+    dc = Decontaminator(DecontamConfig(vocab=1 << 16))
+    dc.add_eval_set(eval_set)
+    mixed = clean.copy()
+    mixed[0] = eval_set[0]                 # full copy
+    mixed[1, 64:192] = eval_set[1, 64:192]  # half copy
+    frac = dc.contamination(mixed)
+    assert frac[0] > 0.95
+    assert frac[1] > 0.3
+    assert frac[2] < 0.02 and frac[3] < 0.02
+    flags = dc.flag(mixed)
+    assert flags[0] and not flags[2]
+
+
+def test_ngram_stats_hll_accuracy():
+    st = NgramStats(StatsConfig(vocab=1 << 16, hll_b=11))
+    state = st.init_state()
+    rng = np.random.default_rng(2)
+    all_windows = set()
+    n = st.cfg.ngram_n
+    for _ in range(10):
+        batch = rng.integers(0, 1 << 16, size=(4, 512)).astype(np.int32)
+        state = st.update(state, batch)
+        for row in batch:
+            w = np.lib.stride_tricks.sliding_window_view(row, n)
+            all_windows.update(x.tobytes() for x in w)
+    est = st.distinct_ngrams(state)
+    truth = len(all_windows)
+    assert abs(est - truth) / truth < 0.12, (est, truth)
+
+
+def test_pipeline_deterministic_resume():
+    cfg = PipelineConfig(seq_len=128, batch_size=4, dedup=False, seed=9)
+    dp1 = DataPlane(cfg)
+    dp2 = DataPlane(cfg)
+    for step in (0, 5, 17):
+        np.testing.assert_array_equal(dp1.next_batch(step)["tokens"],
+                                      dp2.corpus.batch_for_step(step))
+    # host sharding changes the stream
+    cfg2 = PipelineConfig(seq_len=128, batch_size=4, dedup=False, seed=9,
+                          host_id=1, num_hosts=2)
+    dp3 = DataPlane(cfg2)
+    assert not np.array_equal(dp1.corpus.batch_for_step(0),
+                              dp3.corpus.batch_for_step(0))
+
+
+def test_pipeline_dedup_removes_planted_dups():
+    cfg = PipelineConfig(seq_len=128, batch_size=2, dedup=True, seed=1)
+    dp = DataPlane(cfg)
+    tel = dp.telemetry()
+    assert tel["docs_deduped"] > 0
+    assert tel["docs_kept"] + tel["docs_deduped"] == 1000

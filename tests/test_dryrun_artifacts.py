@@ -1,0 +1,92 @@
+"""Validate the multi-pod dry-run sweep artifacts (deliverable e).
+
+Skipped when the sweep hasn't produced artifacts yet; once
+`python -m repro.launch.dryrun --all --both-meshes` has run, these assert
+every required (arch × shape × mesh) cell compiled and recorded sane
+roofline inputs.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ASSIGNED, cells, get_config
+from repro.launch.roofline import ARTIFACT_DIR, load, roofline_fraction
+
+RECS = {(r["arch"], r["shape"], r["mesh"]): r for r in load()} if \
+    glob.glob(os.path.join(ARTIFACT_DIR, "*.json")) else {}
+
+pytestmark = pytest.mark.skipif(
+    len(RECS) < 10, reason="dry-run sweep artifacts not generated yet")
+
+
+def test_every_runnable_cell_has_both_mesh_artifacts():
+    missing = []
+    for arch, shape, ok in cells():
+        for mesh in ("16x16", "2x16x16"):
+            if (arch, shape, mesh) not in RECS:
+                missing.append((arch, shape, mesh))
+    assert not missing, f"{len(missing)} missing cells: {missing[:8]}"
+
+
+def test_all_cells_compiled_ok():
+    bad = [(k, v.get("error", "")) for k, v in RECS.items() if not v.get("ok")]
+    assert not bad, bad[:4]
+
+
+def test_roofline_terms_sane():
+    for key, r in RECS.items():
+        if not r.get("ok"):
+            continue
+        t = r["roofline"]
+        assert all(v >= 0 for v in t.values()), key
+        assert r["flops_per_device"] > 0, key
+        assert r["collective_bytes_per_device"] > 0, key  # sharded => collectives
+        frac = roofline_fraction(r)
+        assert frac is not None and 0 < frac <= 1.5, (key, frac)
+
+
+def test_useful_flops_ratio_bounds():
+    for key, r in RECS.items():
+        if not r.get("ok"):
+            continue
+        # dot FLOPs must be >= ~model flops (some slack for GQA/tied layouts).
+        # Known baseline outliers (documented in EXPERIMENTS §Capacity):
+        # - long_500k decode: MoE capacity computes E*C slots for 1 token;
+        # - multi-pod MoE decode: the partitioner replicates expert compute
+        #   across the idle pod axis (degenerate deployment — decode is
+        #   served per-pod in practice, never spanned across DCN).
+        if r["kind"] == "decode" and r["mesh"] == "2x16x16" and \
+                get_config(key[0]).n_experts:
+            continue
+        lo = 0.02 if key[1] == "long_500k" else 0.05
+        assert lo <= r["useful_flops_ratio"] <= 1.4, (key, r["useful_flops_ratio"])
+
+
+def test_multipod_shards_the_pod_axis():
+    """Multi-pod (512-chip) per-device FLOPs ~ half of single-pod for dense
+    train cells (batch splits over the pod axis). The MoE baseline didn't
+    shard expert capacity over `pod` (ratio ~0.86-0.95) — fixed in §Perf
+    (RULES['capacity'] now includes pod); baseline artifacts keep the old
+    ratio by design."""
+    for arch, shape, ok in cells():
+        if shape != "train_4k":
+            continue
+        a = RECS.get((arch, shape, "16x16"))
+        b = RECS.get((arch, shape, "2x16x16"))
+        if not (a and b and a.get("ok") and b.get("ok")):
+            continue
+        ratio = b["flops_per_device"] / a["flops_per_device"]
+        cfg = get_config(arch)
+        hi = 1.0 if cfg.n_experts else 0.75
+        assert 0.35 <= ratio <= hi, (arch, ratio)
+
+
+def test_moe_cells_have_all_to_all_or_gather_traffic():
+    for arch in ("dbrx-132b", "kimi-k2-1t-a32b"):
+        r = RECS.get((arch, "train_4k", "16x16"))
+        if r and r.get("ok"):
+            c = r["collective_breakdown"]
+            assert (c.get("all-to-all", 0) + c.get("all-gather", 0)) > 0, arch

@@ -1,0 +1,164 @@
+"""Hash-family mechanics: the three evaluation forms agree, GF(2) arithmetic
+is sound, and the paper's Table 3 is reproduced bit-exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FAMILIES, make_family
+from repro.core import gf2
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tokens(seed, S, sigma):
+    return jax.random.randint(jax.random.PRNGKey(seed), (S,), 0, sigma)
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+@pytest.mark.parametrize("n,L,sigma", [(1, 32, 256), (3, 32, 256), (5, 32, 1024),
+                                       (8, 32, 256), (4, 16, 64), (7, 8, 16)])
+def test_three_forms_agree(name, n, L, sigma):
+    if name in ("general", "buffered_general", "cyclic") and L < n:
+        pytest.skip("paper requires L >= n")
+    fam = make_family(name, n=n, L=L)
+    params = fam.init(KEY, sigma)
+    t = _tokens(n * L, 300, sigma)
+    direct = fam.hash_windows_direct(params, t)
+    stream = fam.hash_stream(params, t)
+    fast = fam.hash_windows(params, t)
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(stream))
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(fast))
+    assert direct.dtype == jnp.uint32
+    assert direct.shape == (300 - n + 1,)
+    if L < 32:
+        assert int(jnp.max(direct)) < (1 << L)
+
+
+def test_buffered_general_matches_general_all_ksplits():
+    t = _tokens(7, 200, 256)
+    base = make_family("general", n=8, L=32)
+    params = base.init(KEY, 256)
+    want = base.hash_windows_direct(params, t)
+    for k_split in (1, 2, 4, 8):
+        fam = make_family("buffered_general", n=8, L=32, k_split=k_split)
+        got = fam.hash_stream(params, t)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_rolling_property_window_shift():
+    """h of overlapping windows really is a *rolling* relationship: hashing a
+    shifted stream reproduces the shifted hash sequence (no positional leak)."""
+    fam = make_family("cyclic", n=4, L=32)
+    params = fam.init(KEY, 256)
+    t = _tokens(3, 100, 256)
+    full = fam.hash_windows(params, t)
+    shifted = fam.hash_windows(params, t[10:])
+    np.testing.assert_array_equal(np.asarray(full[10:]), np.asarray(shifted))
+
+
+def test_batched_matches_loop():
+    fam = make_family("general", n=3, L=32)
+    params = fam.init(KEY, 512)
+    batch = jax.random.randint(jax.random.PRNGKey(9), (4, 64), 0, 512)
+    out = fam.hash_windows_batched(params, batch)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(out[i]), np.asarray(fam.hash_windows(params, batch[i])))
+
+
+def test_table3_exact():
+    """Paper Table 3 (bit strings LSB-first): h(a,a) under CYCLIC, L=3."""
+    cyc = make_family("cyclic", n=2, L=3)
+    lsb = lambda s: int(s[::-1], 2)
+    table3 = {"000": "000", "100": "110", "010": "011", "110": "101",
+              "001": "101", "101": "011", "011": "110", "111": "000"}
+    for h1a, want in table3.items():
+        params = {"h1": jnp.asarray([lsb(h1a)], dtype=jnp.uint32)}
+        assert int(cyc.hash_ngram(params, [0, 0])) == lsb(want)
+
+
+# ---------------------------------------------------------------------------
+# GF(2)[x] arithmetic (hypothesis property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**19 - 1), st.integers(0, 2**19 - 1), st.integers(0, 2**19 - 1))
+def test_gf2_ring_axioms(a, b, c):
+    p, L = gf2.GENERAL_L19, 19
+    mm = lambda x, y: gf2.mulmod_host(x, y, p, L)
+    assert mm(a, b) == mm(b, a)
+    assert mm(a, mm(b, c)) == mm(mm(a, b), c)
+    assert mm(a, b ^ c) == mm(a, b) ^ mm(a, c)
+    assert mm(a, 1) == a
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 2**19 - 1))
+def test_gf2_field_inverse_exists(a):
+    """p irreducible => every nonzero element invertible (Lemma 1's engine):
+    a^(2^L - 1) == 1."""
+    p, L = gf2.GENERAL_L19, 19
+    r, e, base = 1, (1 << L) - 1, a
+    while e:
+        if e & 1:
+            r = gf2.mulmod_host(r, base, p, L)
+        base = gf2.mulmod_host(base, base, p, L)
+        e >>= 1
+    assert r == 1
+
+
+def test_paper_polynomials_are_irreducible():
+    for L, p in gf2.PAPER_TABLE2.items():
+        assert gf2.is_irreducible_host(p), f"Table 2 degree {L}"
+    # ERRATUM: the SS11 polynomial as printed is reducible (div by x^2+x+1)
+    assert not gf2.is_irreducible_host(gf2.PAPER_GENERAL_L19_AS_PRINTED)
+    assert gf2.is_irreducible_host(gf2.GENERAL_L19)
+    assert not gf2.is_irreducible_host((1 << 4) | 1)        # x^4+1 = (x+1)^4
+    assert not gf2.is_irreducible_host((1 << 2) | (1 << 1))  # divisible by x
+
+
+def test_find_irreducible_all_degrees():
+    for L in range(2, 33):
+        p = gf2.find_irreducible_host(L)
+        assert p.bit_length() - 1 == L
+        assert gf2.is_irreducible_host(p)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 200))
+def test_rotl_rotr_inverse(v, r):
+    x = jnp.uint32(v)
+    assert int(gf2.rotr(gf2.rotl(x, r, 32), r, 32)) == v
+    # rotation by L is identity
+    assert int(gf2.rotl(x, 32, 32)) == v
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**19 - 1), st.integers(0, 2**19 - 1))
+def test_device_mul_matches_host(a, c):
+    p, L = gf2.GENERAL_L19, 19
+    got = int(gf2.mul_by_const(jnp.uint32(a), c, p, L))
+    assert got == gf2.mulmod_host(a, c, p, L)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**19 - 1))
+def test_device_xtimes_matches_host(a):
+    p, L = gf2.GENERAL_L19, 19
+    got = int(gf2.xtimes(jnp.uint32(a), p & gf2.mask(L), L))
+    assert got == gf2.xtimes_host(a, p, L)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 30), st.data())
+def test_hash_stream_prefix_consistency(S, data):
+    """Streaming more characters never changes already-emitted hashes."""
+    n = data.draw(st.integers(1, min(S, 6)))
+    fam = make_family("cyclic", n=n, L=32)
+    params = fam.init(KEY, 16)
+    t = np.asarray(_tokens(S, S, 16))
+    full = np.asarray(fam.hash_stream(params, t))
+    half = np.asarray(fam.hash_stream(params, t[: S // 2 + n]))
+    np.testing.assert_array_equal(full[: len(half)], half)

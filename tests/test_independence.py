@@ -1,0 +1,180 @@
+"""Exact-enumeration validation of every statistical claim in the paper.
+
+Each test enumerates ALL possible h1 tables at small L and counts joint hash
+values — the probabilities are exact, no statistical slack. Claims C1-C7 of
+DESIGN.md §1.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_family
+from repro.core import independence as ind
+
+
+# --- C4 / Lemma 1: GENERAL is pairwise independent --------------------------
+
+@pytest.mark.parametrize("pair", [
+    ([[0, 0], [1, 1]], 2),   # the βaa/βbb adversarial pair from Prop 3
+    ([[0, 1], [1, 0]], 2),
+    ([[0, 0], [0, 1]], 2),
+    ([[1, 1], [1, 0]], 2),
+])
+def test_general_pairwise_independent(pair):
+    ngrams, sigma = pair
+    fam = make_family("general", n=2, L=4)
+    assert ind.is_kwise_independent(fam, ngrams, sigma=sigma)
+
+
+def test_general_pairwise_n3():
+    fam = make_family("general", n=3, L=6)
+    assert ind.is_kwise_independent(fam, [[0, 0, 1], [0, 1, 0]], sigma=2)
+    assert ind.is_kwise_independent(fam, [[1, 1, 1], [0, 0, 0]], sigma=2)
+
+
+def test_general_uniform():
+    fam = make_family("general", n=2, L=4)
+    for g in ([0, 0], [0, 1], [1, 1]):
+        assert ind.is_uniform(fam, g, sigma=2)
+
+
+# --- C1 / Prop 1: recursive families are at most pairwise -------------------
+
+def test_no_recursive_family_is_3wise():
+    """GENERAL (the paper's best recursive family) fails 3-wise independence
+    on the a^n b b construction — and even 3-wise trailing-zero independence."""
+    fam = make_family("general", n=2, L=3)
+    grams = [[0, 0], [0, 1], [1, 1]]  # aa, ab, bb — windows of 'aabb'
+    assert not ind.is_kwise_independent(fam, grams, sigma=2)
+    assert not ind.is_kwise_trailing_zero_independent(fam, grams, sigma=2)
+    # pairwise trailing-zero independence *does* hold (the contrast in Prop 1)
+    assert ind.is_kwise_trailing_zero_independent(fam, grams[:2], sigma=2)
+
+
+def test_cyclic_not_3wise_even_after_discard():
+    fam = make_family("cyclic", n=2, L=4)
+    tr = lambda h: fam.pairwise_bits(h)
+    grams = [[0, 0], [0, 1], [1, 1]]
+    assert not ind.is_kwise_independent(fam, grams, sigma=2,
+                                        transform=tr, bits=fam.out_bits)
+
+
+# --- C2 / Prop 2: the XOR family is exactly 3-wise --------------------------
+
+def test_threewise_is_3wise_independent():
+    fam = make_family("threewise", n=2, L=2)
+    for grams, sigma in [
+        ([[0, 0], [0, 1], [1, 1]], 2),      # case B of the proof
+        ([[0, 0], [1, 1], [2, 2]], 3),      # case A (distinct at a position)
+        ([[0, 1], [1, 0], [1, 1]], 2),
+    ]:
+        assert ind.is_kwise_independent(fam, grams, sigma=sigma)
+
+
+def test_threewise_not_4wise():
+    """XOR of h(ac), h(ad), h(bc), h(bd) is identically 0 (paper §4)."""
+    fam = make_family("threewise", n=2, L=1)
+    grams = [[0, 2], [0, 3], [1, 2], [1, 3]]
+    assert not ind.is_kwise_independent(fam, grams, sigma=4)
+    hs = ind.enumerate_hashes(fam, grams, sigma=4)
+    xor_all = hs[:, 0] ^ hs[:, 1] ^ hs[:, 2] ^ hs[:, 3]
+    assert (xor_all == 0).all()
+
+
+def test_threewise_trailing_zero_3wise():
+    fam = make_family("threewise", n=2, L=2)
+    assert ind.is_kwise_trailing_zero_independent(
+        fam, [[0, 0], [0, 1], [1, 1]], sigma=2)
+
+
+# --- C3 / Prop 3: randomized Karp-Rabin ------------------------------------
+
+def test_id37_not_uniform_n_even():
+    fam = make_family("id37", n=2, L=4)   # B=37 odd, n even
+    assert not ind.is_uniform(fam, [0, 0], sigma=1)
+
+
+def test_id37_uniform_n_odd():
+    fam = make_family("id37", n=3, L=4)
+    for g, s in ([[0, 0, 0]], 1), ([[0, 1, 0]], 2), ([[0, 1, 2]], 3):
+        assert ind.is_uniform(fam, g[0], sigma=s)
+
+
+def test_id37_even_B_uniform():
+    fam = make_family("id37", n=2, L=4, B=36)
+    assert ind.is_uniform(fam, [0, 0], sigma=1)
+    assert ind.is_uniform(fam, [0, 1], sigma=2)
+
+
+def test_id37_never_pairwise_not_even_2universal():
+    """P(h(βaa) = h(βbb)) > 2^-L for B odd (and βaa/βba for B even)."""
+    fam = make_family("id37", n=2, L=4)
+    p = ind.collision_probability(fam, [0, 0], [1, 1], sigma=2)
+    assert p > 2 ** -4
+    # the proof's exact value: P >= P(δ=0) + P(δ=2^{L-1}) = 2^-L + 2^-L
+    assert p == pytest.approx(2 ** -3)
+    fam_even = make_family("id37", n=2, L=4, B=36)
+    p_even = ind.collision_probability(fam_even, [0, 0], [1, 0], sigma=2)
+    assert p_even > 2 ** -4
+
+
+# --- C6 / Lemma 3: CYCLIC raw is not uniform --------------------------------
+
+def test_cyclic_not_uniform_n_even():
+    fam = make_family("cyclic", n=2, L=4)
+    assert not ind.is_uniform(fam, [0, 0], sigma=1)
+
+
+def test_cyclic_never_pairwise_raw():
+    # n=3 construction from Lemma 3: h(a,a,b) vs h(a,b,a)
+    fam = make_family("cyclic", n=3, L=4)
+    p = ind.collision_probability(fam, [0, 0, 1], [0, 1, 0], sigma=2)
+    assert p > 2 ** -4  # >= 1/2^{L-1} per the proof
+    assert p >= 2 ** -3
+
+
+# --- C7 / Theorem 1: CYCLIC pairwise after discarding n-1 bits ---------------
+
+@pytest.mark.parametrize("n,L", [(2, 4), (3, 5), (2, 5)])
+def test_cyclic_pairwise_after_discard(n, L):
+    fam = make_family("cyclic", n=n, L=L)
+    tr = lambda h: fam.pairwise_bits(h)
+    bits = fam.out_bits
+    pairs = [
+        [[0] * n, [1] * n],
+        [[0] * (n - 1) + [1], [1] + [0] * (n - 1)],
+        [[0] * n, [0] * (n - 1) + [1]],
+    ]
+    for grams in pairs:
+        assert ind.is_kwise_independent(fam, grams, sigma=2,
+                                        transform=tr, bits=bits), grams
+    for g in ([0] * n, [1] * n):
+        assert ind.is_uniform(fam, g, sigma=2, transform=tr, bits=bits)
+
+
+def test_cyclic_discard_any_consecutive_bits():
+    """Theorem 1 allows ANY n-1 consecutive bits — check high-bit discard too."""
+    fam = make_family("cyclic", n=2, L=4)
+    tr = lambda h: fam.pairwise_bits(h, keep_low=False)
+    assert ind.is_kwise_independent(fam, [[0, 0], [1, 1]], sigma=2,
+                                    transform=tr, bits=fam.out_bits)
+
+
+def test_cyclic_trailing_zero_pairwise_after_discard():
+    """The §2 application: distinct counting needs trailing-zero independence;
+    discarded CYCLIC provides it pairwise."""
+    fam = make_family("cyclic", n=2, L=4)
+    tr = lambda h: fam.pairwise_bits(h)
+    assert ind.is_kwise_trailing_zero_independent(
+        fam, [[0, 0], [1, 1]], sigma=2, transform=tr, bits=fam.out_bits)
+
+
+# --- sampled sanity at production scale (L=32) ------------------------------
+
+def test_empirical_uniformity_L32():
+    import jax
+    fam = make_family("cyclic", n=4, L=32)
+    dev = ind.empirical_joint_deviation(
+        fam, [[0, 1, 2, 3]], sigma=4, samples=4096, key=jax.random.PRNGKey(5),
+        bits=8, transform=lambda h: fam.pairwise_bits(h) & 0xFF)
+    assert dev < 4 / np.sqrt(4096)  # ~4 sigma of a fair multinomial

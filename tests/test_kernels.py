@@ -1,0 +1,189 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes / n / L / block sizes, plus equivalence with the
+paper-faithful `repro.core` families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf2, make_family
+from repro.kernels import ref
+from repro.kernels.cyclic import cyclic_rolling
+from repro.kernels.cyclic_fused import cyclic_rolling_fused
+from repro.kernels.general import general_rolling
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _h1v(shape, seed=0):
+    return jax.random.bits(jax.random.PRNGKey(seed), shape, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# CYCLIC kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["direct", "prefix"])
+@pytest.mark.parametrize("B,S,n,L,bb,bs", [
+    (1, 512, 4, 32, 8, 256),
+    (3, 1000, 8, 32, 2, 256),      # non-divisible B and S -> padding path
+    (8, 2048, 25, 32, 8, 512),     # paper's max n
+    (2, 300, 1, 32, 8, 256),       # n=1 (no halo)
+    (2, 700, 5, 19, 8, 256),       # L < 32
+    (4, 600, 40, 32, 4, 256),      # n > 32 (rotation wrap-around)
+    (1, 256, 256, 32, 8, 256),     # halo == block_s boundary
+])
+def test_cyclic_kernel_vs_ref(mode, B, S, n, L, bb, bs):
+    x = _h1v((B, S)) & np.uint32((1 << L) - 1 if L < 32 else 0xFFFFFFFF)
+    got = cyclic_rolling(x, n=n, L=L, block_b=bb, block_s=bs, mode=mode,
+                         interpret=True)
+    want = ref.cyclic_ref(x, n, L)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cyclic_kernel_matches_paper_family():
+    fam = make_family("cyclic", n=6, L=32)
+    params = fam.init(KEY, 256)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 640), 0, 256)
+    h1v = params["h1"][toks]
+    got = cyclic_rolling(h1v, n=6, L=32, block_s=256, interpret=True)
+    want = fam.hash_windows_batched(params, toks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(13, 400), st.sampled_from([8, 19, 32]),
+       st.sampled_from(["direct", "prefix"]))
+def test_cyclic_kernel_property(n, S, L, mode):
+    x = _h1v((2, S), seed=S) & np.uint32((1 << L) - 1 if L < 32 else 0xFFFFFFFF)
+    got = cyclic_rolling(x, n=n, L=L, block_b=2, block_s=256, mode=mode,
+                         interpret=True)
+    want = ref.cyclic_ref(x, n, L)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# GENERAL kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,n,L,bs", [
+    (2, 512, 4, 32, 256),
+    (1, 777, 9, 32, 256),
+    (4, 512, 3, 19, 256),
+    (2, 300, 1, 20, 256),
+])
+def test_general_kernel_vs_ref(B, S, n, L, bs):
+    p = gf2.find_irreducible_host(L)
+    x = _h1v((B, S), seed=n) & np.uint32((1 << L) - 1 if L < 32 else 0xFFFFFFFF)
+    got = general_rolling(x, n=n, p=p, L=L, block_b=2, block_s=bs, interpret=True)
+    want = ref.general_ref(x, n, p, L)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_general_kernel_matches_paper_family():
+    L = 32
+    fam = make_family("general", n=5, L=L)
+    params = fam.init(KEY, 512)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (3, 500), 0, 512)
+    h1v = params["h1"][toks]
+    got = general_rolling(h1v, n=5, p=fam.p, L=L, block_b=2, block_s=256,
+                          interpret=True)
+    want = fam.hash_windows_batched(params, toks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Fused lookup kernel (one-hot MXU gather)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,n", [(2, 512, 8), (1, 300, 3), (4, 1024, 15)])
+def test_fused_kernel_vs_ref(B, S, n):
+    table = _h1v((256,), seed=9)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, 256)
+    got = cyclic_rolling_fused(toks, table, n=n, block_b=2, block_s=256,
+                               interpret=True)
+    want = ref.cyclic_fused_ref(toks, table, n, 32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_lookup_is_exact_for_extreme_values():
+    """The 16-bit split must be exact for all-ones / high-bit patterns."""
+    table = jnp.asarray([0xFFFFFFFF, 0x80000000, 0x7FFFFFFF, 0x00010001] +
+                        [0] * 252, dtype=jnp.uint32)
+    toks = jnp.asarray([[0, 1, 2, 3] * 64], dtype=jnp.int32)
+    got = cyclic_rolling_fused(toks, table, n=1, block_b=1, block_s=256,
+                               interpret=True)
+    want = ref.cyclic_fused_ref(toks, table, 1, 32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Bloom membership kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,k,log2_m", [(2, 512, 4, 16), (3, 300, 2, 14),
+                                          (1, 2048, 8, 18)])
+def test_bloom_kernel_vs_ref(B, S, k, log2_m):
+    from repro.kernels.bloom import bloom_probe, bloom_probe_ref
+    ha = _h1v((B, S), seed=1)
+    hb = _h1v((B, S), seed=2)
+    # filter with ~25% fill
+    bits = jax.random.bits(jax.random.PRNGKey(3), (1 << (log2_m - 5),),
+                           dtype=jnp.uint32)
+    bits = bits & jax.random.bits(jax.random.PRNGKey(4), bits.shape,
+                                  dtype=jnp.uint32)
+    got = bloom_probe(ha, hb, bits, k=k, log2_m=log2_m, block_b=2,
+                      block_s=256, interpret=True)
+    want = bloom_probe_ref(ha, hb, bits, k=k, log2_m=log2_m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if k <= 4:  # hit prob ~0.25^k — only meaningfully non-degenerate for small k
+        assert bool(got.any()) and not bool(got.all())
+
+
+def test_bloom_kernel_agrees_with_core_filter():
+    from repro.core import BloomFilter
+    from repro.kernels.bloom import bloom_probe
+    bf = BloomFilter(log2_m=16, k=4)
+    ka, kb = jax.random.split(KEY)
+    add_a = jax.random.bits(ka, (500,), dtype=jnp.uint32)
+    add_b = jax.random.bits(kb, (500,), dtype=jnp.uint32)
+    bits = bf.add(bf.init(), add_a, add_b)
+    got = bloom_probe(add_a[None, :], add_b[None, :], bits, k=4, log2_m=16,
+                      block_b=1, block_s=256, interpret=True)
+    assert bool(got.all())  # no false negatives through the kernel either
+
+
+# ---------------------------------------------------------------------------
+# HLL register-update kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,b", [(4096, 8), (5000, 10), (300, 6)])
+def test_hll_kernel_vs_ref(N, b):
+    from repro.kernels.hll import hll_update, hll_update_ref
+    h = _h1v((N,), seed=b)
+    got = hll_update(h, b=b, rank_bits=32 - b, block=1024, interpret=True)
+    want = hll_update_ref(h, b=b, rank_bits=32 - b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hll_kernel_estimate_quality():
+    from repro.core.sketches import HyperLogLog
+    from repro.kernels.hll import hll_update
+    h = jax.random.bits(jax.random.PRNGKey(11), (200_000,), dtype=jnp.uint32)
+    regs = hll_update(h, b=10, rank_bits=22, block=4096, interpret=True)
+    est = float(HyperLogLog(b=10, hash_bits=32).estimate(regs))
+    assert abs(est - 200_000) / 200_000 < 0.12
+
+
+# ---------------------------------------------------------------------------
+# ops.py dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_and_shapes():
+    from repro.kernels import ops
+    x = _h1v((2, 3, 128))
+    out = ops.cyclic(x, n=4)
+    assert out.shape == (2, 3, 125)
+    out2 = ops.cyclic(x, n=4, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))

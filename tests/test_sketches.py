@@ -1,0 +1,106 @@
+"""Sketches (HLL / Bloom / MinHash / CountMin) driven by the hash families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BloomFilter, CountMinSketch, HyperLogLog, MinHash,
+                        make_family, trailing_zeros)
+
+KEY = jax.random.PRNGKey(42)
+
+
+def test_trailing_zeros_matches_paper_definition():
+    vals = jnp.asarray([0, 1, 2, 4, 8, 12, 0x80000000, 3], dtype=jnp.uint32)
+    got = np.asarray(trailing_zeros(vals, 32))
+    np.testing.assert_array_equal(got, [32, 0, 1, 2, 3, 2, 31, 0])
+
+
+def _window_hashes(tokens, n=8, seed=0):
+    fam = make_family("cyclic", n=n, L=32)
+    params = fam.init(jax.random.PRNGKey(seed), 65536)
+    return fam.pairwise_bits(fam.hash_windows(params, tokens))
+
+
+def test_hll_estimates_distinct_ngrams():
+    """Paper §2: estimate #distinct n-grams without enumerating them."""
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, 65536, size=200_000), dtype=jnp.uint32)
+    n = 8
+    hashes = _window_hashes(tokens, n=n)
+    hll = HyperLogLog(b=10, hash_bits=32 - n + 1)
+    regs = hll.update(hll.init(), hashes)
+    est = float(hll.estimate(regs))
+    # ground truth by brute force
+    wins = np.lib.stride_tricks.sliding_window_view(np.asarray(tokens), n)
+    truth = len({w.tobytes() for w in wins})
+    rel_err = abs(est - truth) / truth
+    assert rel_err < 0.10, (est, truth)  # 1.04/sqrt(1024) ~ 3.3%; 3x slack
+
+
+def test_hll_merge_is_union():
+    hll = HyperLogLog(b=8, hash_bits=32)
+    h1 = jax.random.bits(jax.random.PRNGKey(1), (5000,), dtype=jnp.uint32)
+    h2 = jax.random.bits(jax.random.PRNGKey(2), (5000,), dtype=jnp.uint32)
+    ra = hll.update(hll.init(), h1)
+    rb = hll.update(hll.init(), h2)
+    merged = hll.merge(ra, rb)
+    both = hll.update(ra, h2)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(both))
+
+
+def test_bloom_no_false_negatives_and_low_fpr():
+    bf = BloomFilter(log2_m=16, k=4)
+    ka, kb = jax.random.split(KEY)
+    h_a = jax.random.bits(ka, (2000,), dtype=jnp.uint32)
+    h_b = jax.random.bits(kb, (2000,), dtype=jnp.uint32)
+    bits = bf.add(bf.init(), h_a, h_b)
+    # no false negatives
+    assert bool(jnp.all(bf.contains(bits, h_a, h_b)))
+    # false positive rate near (1 - e^{-kn/m})^k ~ (k*n/m)^k for small fill
+    qa = jax.random.bits(jax.random.PRNGKey(7), (20000,), dtype=jnp.uint32)
+    qb = jax.random.bits(jax.random.PRNGKey(8), (20000,), dtype=jnp.uint32)
+    fpr = float(jnp.mean(bf.contains(bits, qa, qb)))
+    n, m, k = 2000, bf.m, bf.k
+    theory = (1 - np.exp(-k * n / m)) ** k
+    assert fpr < 4 * theory + 0.002, (fpr, theory)
+
+
+def test_bloom_scatter_or_is_exact():
+    """Packed-word OR-scatter must equal a dense reference under collisions."""
+    bf = BloomFilter(log2_m=8, k=8)
+    h_a = jnp.asarray([1, 1, 2, 255, 255], dtype=jnp.uint32)
+    h_b = jnp.asarray([3, 3, 5, 7, 9], dtype=jnp.uint32)
+    bits = np.asarray(bf.add(bf.init(), h_a, h_b))
+    dense = np.zeros(bf.m, dtype=bool)
+    probes = np.asarray(bf._probes(h_a, h_b)).reshape(-1)
+    dense[probes] = True
+    packed = np.zeros(bf.m // 32, dtype=np.uint32)
+    for i, v in enumerate(dense):
+        if v:
+            packed[i // 32] |= np.uint32(1) << np.uint32(i % 32)
+    np.testing.assert_array_equal(bits, packed)
+
+
+def test_minhash_jaccard_estimate():
+    mh = MinHash(k=256)
+    params = mh.init(KEY)
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, 2**32, size=4000, dtype=np.uint32)
+    # two sets with known overlap
+    a = jnp.asarray(base[:3000])
+    b = jnp.asarray(base[1000:4000])
+    sig_a, sig_b = mh.signature(params, a), mh.signature(params, b)
+    est = float(MinHash.jaccard(sig_a, sig_b))
+    truth = 2000 / 4000
+    assert abs(est - truth) < 0.1
+
+
+def test_countmin_overestimates_and_bounds():
+    cms = CountMinSketch(depth=4, log2_width=12)
+    params = cms.init(KEY)
+    items = jnp.asarray(np.repeat(np.arange(100, dtype=np.uint32), 7))
+    params = cms.add(params, items)
+    q = cms.query(params, jnp.arange(100, dtype=jnp.uint32))
+    assert bool(jnp.all(q >= 7))           # never underestimates
+    assert float(jnp.mean(q)) < 7 + 5      # epsilon*N slack
