@@ -41,7 +41,15 @@ def run(n_chars: int = CHARS):
     rows = []
     for name in FAMILIES:
         for n in NS:
-            fam = make_family(name, n=n, L=32)
+            if name == "buffered_general":
+                # §8 K-split: the k_split=1 Lemma-2 table has 2^n entries,
+                # intractable to build host-side for n >= 20; pick the
+                # smallest split keeping each sub-table <= 2^13.
+                ks = next(k for k in range(1, n + 1)
+                          if n % k == 0 and n // k <= 13)
+                fam = make_family(name, n=n, L=32, k_split=ks)
+            else:
+                fam = make_family(name, n=n, L=32)
             params = fam.init(key, 256)
             if name == "buffered_general":
                 # the buffered variant accelerates the *recursive* algorithm

@@ -1,26 +1,41 @@
 """Benchmark entry point: one section per paper table/figure + system benches.
 
-Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+Prints ``name,us_per_call,derived`` CSV (one line per measurement) and also
+writes a machine-readable JSON map ``{name: us_per_call}`` so the perf
+trajectory is tracked PR over PR (default ``BENCH_pr1.json`` at the repo
+root; override the path with REPRO_BENCH_JSON).
+
 Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
 CI/pytest smoke uses a smaller value for time).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
 
 def main() -> None:
-    from benchmarks import fig1_speed, pipeline_bench, table1_properties
+    from benchmarks import (fig1_speed, pipeline_bench, sketch_fusion,
+                            table1_properties)
     n_chars = int(os.environ.get("REPRO_BENCH_CHARS", 4_300_000))
     rows = []
     print("name,us_per_call,derived")
     for mod, kw in ((fig1_speed, {"n_chars": n_chars}),
                     (table1_properties, {}),
-                    (pipeline_bench, {})):
-        for r in mod.run(**kw):
+                    (pipeline_bench, {}),
+                    (sketch_fusion, {})):
+        try:
+            section = mod.run(**kw)
+        except Exception as e:  # noqa: BLE001 - a broken section must not
+            # take down the others (or the JSON trajectory record)
+            msg = str(e).replace(",", ";")    # keep the 3-column CSV contract
+            print(f"{mod.__name__},0.0,failed ({type(e).__name__}: {msg})",
+                  flush=True)
+            continue
+        for r in section:
             line = f"{r['name']},{r['us_per_call']:.1f},{r['derived']}"
-            rows.append(line)
+            rows.append(r)
             print(line, flush=True)
     # roofline summary (if dry-run artifacts exist)
     try:
@@ -29,6 +44,15 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:  # noqa: BLE001
         print(f"roofline_summary,0.0,skipped ({type(e).__name__})", flush=True)
+    out_path = os.environ.get(
+        "REPRO_BENCH_JSON",
+        os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                     "BENCH_pr1.json"))
+    with open(out_path, "w") as f:
+        json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

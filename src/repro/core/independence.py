@@ -78,7 +78,9 @@ def joint_counts(hashes: np.ndarray, bits: int) -> np.ndarray:
     combined = np.zeros(A, dtype=np.uint64)
     for j in range(k):
         combined = (combined << np.uint64(bits)) | hashes[:, j].astype(np.uint64)
-    counts = np.bincount(combined, minlength=1 << (bits * k))
+    # bincount refuses uint64 (no safe cast to intp); the combined index is
+    # bounded by the histogram size, which must be int64-allocatable anyway
+    counts = np.bincount(combined.astype(np.int64), minlength=1 << (bits * k))
     return counts.reshape((1 << bits,) * k)
 
 

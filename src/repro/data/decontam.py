@@ -5,6 +5,12 @@ filter; training batches are scanned on-device and any sequence containing a
 hit above `max_hit_frac` is flagged. Bloom FPR analysis assumes independent
 probe positions — supplied here by two independent CYCLIC draws feeding
 double hashing (pairwise independence per Theorem 1).
+
+The scan is fused (``ops.cyclic_bloom``): both rolling hashes, the
+Theorem-1 discard, the k double-hashed probes against the VMEM-resident
+filter, and the per-row hit-count reduction happen in one device pass —
+only a (B,) count vector leaves the chip. The one-time eval-set *add* keeps
+the jnp scatter-OR path (it runs once per eval set, not per batch).
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BloomFilter, make_family
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -27,6 +34,7 @@ class DecontamConfig:
     vocab: int = 1 << 17
     max_hit_frac: float = 0.5    # flag a sequence when >50% of windows hit
     seed: int = 7
+    impl: str = "auto"           # kernel dispatch: auto | pallas | ref
 
 
 class Decontaminator:
@@ -55,9 +63,14 @@ class Decontaminator:
         return self.bloom.add(bits, ha.reshape(-1), hb.reshape(-1))
 
     def _scan_impl(self, bits, tokens):
-        ha, hb = self._hashes(tokens)
-        hits = self.bloom.contains(bits, ha, hb)      # (..., W)
-        return hits.astype(jnp.float32).mean(axis=-1)
+        # fused: double rolling hash + probes + per-row count, on-chip
+        counts = ops.cyclic_bloom(
+            self.fam_a._lookup(self.pa, tokens),
+            self.fam_b._lookup(self.pb, tokens),
+            bits, n=self.cfg.ngram_n, L=self.cfg.L, k=self.cfg.k,
+            log2_m=self.cfg.log2_m, impl=self.cfg.impl)
+        W = tokens.shape[-1] - self.cfg.ngram_n + 1
+        return counts.astype(jnp.float32) / np.float32(W)
 
     def add_eval_set(self, tokens: np.ndarray) -> None:
         """tokens: (B, S) eval sequences to protect."""

@@ -6,22 +6,40 @@ near-duplicate. Pairwise independence of the window hashes is exactly what
 makes the MinHash collision estimator unbiased, and it is the property the
 paper proves CYCLIC (after the (n-1)-bit discard) to have.
 
-Two operating modes:
-* :class:`MinHashDeduper` — streaming, host-side LSH-banded index (the shape
-  real data pipelines use: Gopher/RefinedWeb-style);
-* :func:`signature_batch` — the device-side (jit/vmap) signature computation
-  used inside the training input pipeline.
+The data-plane is *batched and fused*: documents are bucket-padded into
+(D, S) batches and signed by one ``ops.cyclic_minhash`` call per bucket —
+the rolling hash, the Theorem-1 discard, and the k-lane affine remix + min
+all happen in a single device pass (kernels/sketch_fused.py on TPU, one
+fused jit on CPU), so the (D, S-n+1) window-hash array and its k=64x MinHash
+expansion never round-trip HBM. Padded windows are excluded from the min
+outright, making a padded row's signature bit-identical to the unpadded
+document's — signatures are independent of bucket size.
+
+Operating modes:
+* :meth:`MinHashDeduper.add_batch`  — batched corpus dedup: one signing pass
+  per bucket, then a vectorized NumPy group-by over LSH band keys generates
+  candidates; only candidate pairs are verified, sequentially, preserving
+  streaming first-wins semantics exactly.
+* :meth:`MinHashDeduper.check_and_add` — per-document streaming API (kept
+  for online ingest; same index state as add_batch, so the two compose).
+* :func:`signature_batch` — the *unfused* reference signature computation
+  (hash array materialised, then re-mixed); kept as the parity oracle.
+* :func:`signature_batch_fused` — the fused device-side equivalent for
+  (B, S) batches inside the training input pipeline.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MinHash, make_family
+from repro.core import Cyclic, MinHash, make_family
+from repro.kernels import ops
+
+_SENTINEL = np.uint32(0xFFFFFFFF)
 
 
 @dataclasses.dataclass
@@ -34,10 +52,16 @@ class DedupConfig:
     family: str = "cyclic"
     vocab: int = 1 << 17
     seed: int = 0
+    impl: str = "auto"           # kernel dispatch: auto | pallas | ref
+
+
+def _bucket(n: int) -> int:
+    """Next power-of-two length >= n (min 64): O(log) distinct jit shapes."""
+    return max(64, 1 << int(np.ceil(np.log2(max(n, 2)))))
 
 
 class MinHashDeduper:
-    """Streaming near-dedup with an LSH band index."""
+    """Near-dedup with an LSH band index; batched signing, vectorized probing."""
 
     def __init__(self, cfg: DedupConfig):
         self.cfg = cfg
@@ -52,47 +76,167 @@ class MinHashDeduper:
         self._bands: List[Dict[bytes, List[int]]] = [
             {} for _ in range(cfg.lsh_bands)]
         self._sigs: List[np.ndarray] = []
-        self._sig_fn = jax.jit(self._signature)
+        self._sig_fn = jax.jit(self._signature_batch_impl)
+        self._sig_one_fn = jax.jit(self._signature_unfused_impl)
 
-    def _signature(self, tokens: jnp.ndarray, n_windows) -> jnp.ndarray:
+    # -- signing ------------------------------------------------------------
+
+    def _signature_batch_impl(self, tokens: jnp.ndarray,
+                              n_windows: jnp.ndarray) -> jnp.ndarray:
+        """(D, S) bucket-padded batch + (D,) valid-window counts -> (D, k)."""
+        if isinstance(self.fam, Cyclic):
+            h1v = self.fam._lookup(self.fam_params, tokens)
+            return ops.cyclic_minhash(
+                h1v, self.mh_params["a"], self.mh_params["b"],
+                n=self.cfg.ngram_n, L=self.cfg.L, n_windows=n_windows,
+                discard=True, impl=self.cfg.impl)
+        # generic-family fallback: unfused hash, same masked-min epilogue
+        h = self.fam.hash_windows_batched(self.fam_params, tokens)
+        if hasattr(self.fam, "pairwise_bits"):
+            h = self.fam.pairwise_bits(h)
+        idx = jnp.arange(h.shape[-1], dtype=jnp.int32)
+        valid = idx[None, :] < n_windows.astype(jnp.int32)[:, None]
+        mixed = (self.mh_params["a"][None, :, None] * h[:, None, :]
+                 + self.mh_params["b"][None, :, None])
+        mixed = jnp.where(valid[:, None, :], mixed, _SENTINEL)
+        return jnp.min(mixed, axis=-1)
+
+    def _signature_unfused_impl(self, tokens: jnp.ndarray,
+                                n_windows) -> jnp.ndarray:
+        """Seed-architecture per-document path (one jit call per doc) — the
+        unfused baseline for the sketch_fusion benchmark."""
         h = self.fam.hash_windows(self.fam_params, tokens)
         if hasattr(self.fam, "pairwise_bits"):
-            h = self.fam.pairwise_bits(h)    # Theorem-1 discard
-        # mask windows that fall into the bucket padding out of the min
-        idx = jnp.arange(h.shape[-1])
-        h = jnp.where(idx < n_windows, h, jnp.uint32(0xFFFFFFFF))
-        return self.mh.signature(self.mh_params, h)
+            h = self.fam.pairwise_bits(h)
+        idx = jnp.arange(h.shape[-1], dtype=jnp.int32)
+        mixed = (self.mh_params["a"][:, None] * h[None, :]
+                 + self.mh_params["b"][:, None])
+        mixed = jnp.where(idx[None, :] < n_windows, mixed, _SENTINEL)
+        return jnp.min(mixed, axis=-1)
+
+    def signature_many(self, docs: Sequence[np.ndarray]) -> np.ndarray:
+        """Sign a whole document list: (D, k) uint32 in one device call per
+        (length-bucket, row-bucket) shape — not one per document."""
+        D = len(docs)
+        out = np.empty((D, self.cfg.n_signatures), np.uint32)
+        groups: Dict[int, List[int]] = {}
+        for i, d in enumerate(docs):
+            groups.setdefault(_bucket(len(d)), []).append(i)
+        for bucket, idxs in sorted(groups.items()):
+            # cap rows so the CPU path's (rows, bucket, k_chunk) remix tile
+            # stays bounded (~64 MB) regardless of bucket size
+            max_rows = max(8, (1 << 20) // bucket)
+            for s in range(0, len(idxs), max_rows):
+                chunk = idxs[s : s + max_rows]
+                Dp = max(8, 1 << int(np.ceil(np.log2(len(chunk)))))
+                toks = np.zeros((Dp, bucket), np.uint32)
+                nw = np.zeros((Dp,), np.int32)
+                for r, i in enumerate(chunk):
+                    d = np.asarray(docs[i])
+                    toks[r, : len(d)] = d
+                    nw[r] = len(d) - self.cfg.ngram_n + 1
+                sigs = np.asarray(self._sig_fn(jnp.asarray(toks),
+                                               jnp.asarray(nw)))
+                out[np.asarray(chunk)] = sigs[: len(chunk)]
+        return out
 
     def signature(self, tokens: np.ndarray) -> np.ndarray:
-        # bucket-pad to the next power of two: O(log) distinct jit shapes
+        return self.signature_many([tokens])[0]
+
+    def signature_unfused(self, tokens: np.ndarray) -> np.ndarray:
+        """Per-document unfused signature (benchmark baseline; bit-identical
+        to :meth:`signature`)."""
         n = len(tokens)
-        bucket = max(64, 1 << int(np.ceil(np.log2(max(n, 2)))))
-        padded = np.zeros(bucket, dtype=np.uint32)
+        padded = np.zeros(_bucket(n), dtype=np.uint32)
         padded[:n] = tokens
         n_windows = n - self.cfg.ngram_n + 1
-        return np.asarray(self._sig_fn(jnp.asarray(padded), n_windows))
+        return np.asarray(self._sig_one_fn(jnp.asarray(padded), n_windows))
 
-    def check_and_add(self, tokens: np.ndarray) -> Tuple[bool, Optional[int], float]:
-        """Returns (is_duplicate, matched_doc_id, best_jaccard). Adds the doc
-        to the index if it is not a duplicate."""
-        sig = self.signature(tokens)
+    # -- LSH band index -----------------------------------------------------
+
+    def _band_keys(self, sigs: np.ndarray) -> np.ndarray:
+        """(D, k) uint32 -> (D, bands) void scalars; .tobytes() of a key
+        equals the legacy per-band row-bytes dict key."""
+        D = sigs.shape[0]
+        blocks = np.ascontiguousarray(
+            sigs.reshape(D, self.cfg.lsh_bands, self.rows))
+        return blocks.view(np.dtype((np.void, self.rows * 4)))[..., 0]
+
+    def _insert(self, sig: np.ndarray, keys: Sequence[bytes]) -> int:
         doc_id = len(self._sigs)
-        candidates = set()
-        keys = []
-        for b in range(self.cfg.lsh_bands):
-            kb = sig[b * self.rows : (b + 1) * self.rows].tobytes()
-            keys.append(kb)
-            candidates.update(self._bands[b].get(kb, ()))
-        best_j, best_id = 0.0, None
-        for c in candidates:
-            j = float((self._sigs[c] == sig).mean())
-            if j > best_j:
-                best_j, best_id = j, c
-        if best_id is not None and best_j >= self.cfg.threshold:
-            return True, best_id, best_j
         self._sigs.append(sig)
         for b, kb in enumerate(keys):
             self._bands[b].setdefault(kb, []).append(doc_id)
+        return doc_id
+
+    def _best_match(self, sig: np.ndarray,
+                    candidates: Sequence[int]) -> Tuple[float, Optional[int]]:
+        if not candidates:
+            return 0.0, None
+        cand_sigs = np.stack([self._sigs[c] for c in candidates])
+        jac = (cand_sigs == sig[None, :]).mean(axis=1)
+        best = int(np.argmax(jac))
+        return float(jac[best]), candidates[best]
+
+    def add_batch(self, docs: Sequence[np.ndarray]) -> np.ndarray:
+        """Dedup a document batch; returns (D,) bool duplicate flags.
+
+        Signing is one fused device call per shape bucket; candidate
+        generation is a vectorized group-by over band keys (np.unique per
+        band) against both the batch and the existing index. Only candidate
+        pairs are Jaccard-verified, sequentially in document order, so the
+        kept/duplicate decisions match the streaming per-document path
+        exactly (a doc is only compared against *kept* predecessors).
+        """
+        D = len(docs)
+        flags = np.zeros(D, bool)
+        if D == 0:
+            return flags
+        sigs = self.signature_many(docs)
+        kb = self._band_keys(sigs)                       # (D, bands) void
+        index_cand: List[set] = [set() for _ in range(D)]
+        batch_cand: List[set] = [set() for _ in range(D)]
+        for b in range(self.cfg.lsh_bands):
+            uniq, inv = np.unique(kb[:, b], return_inverse=True)
+            hits = [self._bands[b].get(u.tobytes()) for u in uniq]
+            order = np.argsort(inv, kind="stable")       # groups, ids ascending
+            sorted_inv = inv[order]
+            starts = np.flatnonzero(
+                np.r_[True, sorted_inv[1:] != sorted_inv[:-1]])
+            ends = np.r_[starts[1:], len(order)]
+            for s, e in zip(starts, ends):
+                members = order[s:e]
+                hit = hits[sorted_inv[s]]
+                for pos, i in enumerate(members):
+                    if hit:
+                        index_cand[i].update(hit)
+                    if pos:                              # earlier batch docs
+                        batch_cand[i].update(members[:pos].tolist())
+        gid: List[Optional[int]] = [None] * D
+        for i in range(D):
+            cands = set(index_cand[i])
+            cands.update(gid[j] for j in batch_cand[i] if gid[j] is not None)
+            best_j, _ = self._best_match(sigs[i], sorted(cands))
+            if best_j >= self.cfg.threshold:
+                flags[i] = True
+            else:
+                gid[i] = self._insert(sigs[i],
+                                      [k.tobytes() for k in kb[i]])
+        return flags
+
+    def check_and_add(self, tokens: np.ndarray) -> Tuple[bool, Optional[int], float]:
+        """Streaming API: returns (is_duplicate, matched_doc_id,
+        best_jaccard); adds the doc to the index if it is not a duplicate."""
+        sig = self.signature(tokens)
+        keys = [sig[b * self.rows : (b + 1) * self.rows].tobytes()
+                for b in range(self.cfg.lsh_bands)]
+        candidates = set()
+        for b, kb in enumerate(keys):
+            candidates.update(self._bands[b].get(kb, ()))
+        best_j, best_id = self._best_match(sig, sorted(candidates))
+        if best_id is not None and best_j >= self.cfg.threshold:
+            return True, best_id, best_j
+        self._insert(sig, keys)
         return False, None, best_j
 
     def __len__(self):
@@ -101,7 +245,9 @@ class MinHashDeduper:
 
 def signature_batch(fam, fam_params, mh: MinHash, mh_params,
                     tokens: jnp.ndarray) -> jnp.ndarray:
-    """Device-side batched signatures. tokens: (B, S) -> (B, k) uint32."""
+    """Unfused reference: (B, S) -> (B, k) uint32. Materialises the window
+    hashes and re-mixes them (the seed data-plane); the fused paths are
+    validated bit-identical against this."""
     def one(t):
         h = fam.hash_windows(fam_params, t)
         if hasattr(fam, "pairwise_bits"):
@@ -110,11 +256,42 @@ def signature_batch(fam, fam_params, mh: MinHash, mh_params,
     return jax.vmap(one)(tokens)
 
 
+def signature_batch_fused(fam, fam_params, mh: MinHash, mh_params,
+                          tokens: jnp.ndarray, n_windows=None,
+                          impl: str = "auto") -> jnp.ndarray:
+    """Fused device-side batched signatures: (B, S) -> (B, k) uint32.
+
+    CYCLIC families route through ops.cyclic_minhash (single device pass);
+    other families fall back to the unfused reference. Bit-identical to
+    :func:`signature_batch` for unpadded input.
+    """
+    if isinstance(fam, Cyclic):
+        h1v = fam._lookup(fam_params, tokens)
+        return ops.cyclic_minhash(h1v, mh_params["a"], mh_params["b"],
+                                  n=fam.n, L=fam.L, n_windows=n_windows,
+                                  discard=True, impl=impl)
+    return signature_batch(fam, fam_params, mh, mh_params, tokens)
+
+
+# Hoisted constants for exact_duplicate_mask: the k=4 sketch and its fixed-
+# key params are identical on every call, so build them once (lazily — no
+# device work at import time).
+_EXACT_MH = MinHash(k=4)
+_EXACT_MH_PARAMS: Optional[Dict[str, jnp.ndarray]] = None
+
+
+def _exact_mh_params() -> Dict[str, jnp.ndarray]:
+    global _EXACT_MH_PARAMS
+    if _EXACT_MH_PARAMS is None:
+        _EXACT_MH_PARAMS = _EXACT_MH.init(jax.random.PRNGKey(0))
+    return _EXACT_MH_PARAMS
+
+
 def exact_duplicate_mask(fam, fam_params, tokens: jnp.ndarray) -> jnp.ndarray:
     """(B, S) batch -> (B,) bool; True where a sequence's full-content hash
     collides with an earlier sequence in the batch (exact-dedup pass)."""
-    sigs = signature_batch(fam, fam_params, MinHash(k=4),
-                           MinHash(k=4).init(jax.random.PRNGKey(0)), tokens)
+    sigs = signature_batch_fused(fam, fam_params, _EXACT_MH,
+                                 _exact_mh_params(), tokens)
     # two sequences identical => identical signatures; compare lexicographically
     B = sigs.shape[0]
     eq = jnp.all(sigs[:, None, :] == sigs[None, :, :], axis=-1)  # (B, B)

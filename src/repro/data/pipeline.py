@@ -42,16 +42,14 @@ class PackedCorpus:
         self.cfg = cfg
         spec = spec or CorpusSpec(vocab=cfg.vocab, seed=cfg.seed)
         docs, dup_of = documents(spec)
-        kept: List[np.ndarray] = []
         self.n_duplicates = 0
         if cfg.dedup:
             dd = MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed))
-            for d in docs:
-                is_dup, _, _ = dd.check_and_add(d)
-                if is_dup:
-                    self.n_duplicates += 1
-                else:
-                    kept.append(d)
+            # one fused signing pass per shape bucket + vectorized LSH
+            # probing — not one device call per document
+            flags = dd.add_batch(docs)
+            self.n_duplicates = int(flags.sum())
+            kept: List[np.ndarray] = [d for d, f in zip(docs, flags) if not f]
         else:
             kept = docs
         pieces = []
@@ -68,10 +66,10 @@ class PackedCorpus:
         rng = np.random.default_rng(
             np.random.SeedSequence([cfg.seed, step, cfg.host_id]))
         rows = rng.integers(0, n_rows, size=cfg.batch_size)
-        out = np.stack([
-            self.stream[r * cfg.seq_len : r * cfg.seq_len + cfg.seq_len]
-            for r in rows])
-        return out.astype(np.int32)
+        # single fancy-indexed gather (row starts x in-row offsets)
+        take = min(cfg.seq_len, len(self.stream))
+        idx = rows[:, None] * cfg.seq_len + np.arange(take)[None, :]
+        return self.stream[idx].astype(np.int32)
 
 
 class DataPlane:

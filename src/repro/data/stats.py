@@ -3,6 +3,13 @@
 Per training batch (on-device, jit): rolling CYCLIC hashes -> HyperLogLog
 distinct-n-gram registers + CountMin heavy-hitter counts. State is a small
 pytree that lives beside the train state and is checkpointed with it.
+
+The HLL leg routes through the fused hash->sketch path
+(``ops.cyclic_hll``): on TPU the register maxima are reduced in VMEM scratch
+inside the rolling-hash grid, so only the (m,) register file leaves the chip
+per batch. CountMin keeps the jnp scatter-add epilogue (XLA scatter has an
+add combiner; there is no efficient in-kernel histogram over a 2^16-wide
+table), fed by the same one-jit hash graph.
 """
 from __future__ import annotations
 
@@ -13,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CountMinSketch, HyperLogLog, make_family
+from repro.core import CountMinSketch, Cyclic, HyperLogLog, make_family
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -25,6 +33,7 @@ class StatsConfig:
     cms_log2_width: int = 16
     vocab: int = 1 << 17
     seed: int = 11
+    impl: str = "auto"           # kernel dispatch: auto | pallas | ref
 
 
 class NgramStats:
@@ -47,9 +56,22 @@ class NgramStats:
                                     else jnp.int32)}
 
     def _update_impl(self, state, tokens):
-        h = self.fam.pairwise_bits(
-            self.fam.hash_windows_batched(self.fp, tokens)).reshape(-1)
-        hll_regs = self.hll.update(state["hll"], h)
+        if isinstance(self.fam, Cyclic):
+            # fused path: hash + discard + register-max in one device pass;
+            # CMS reuses the same hash graph (XLA CSEs the shared rolling
+            # hash on the ref path; on TPU the HLL leg never materialises it)
+            h1v = self.fam._lookup(self.fp, tokens)
+            batch_regs = ops.cyclic_hll(h1v, n=self.cfg.ngram_n,
+                                        L=self.cfg.L, b=self.cfg.hll_b,
+                                        impl=self.cfg.impl)
+            hll_regs = self.hll.merge(state["hll"], batch_regs)
+            h = self.fam.pairwise_bits(
+                ops.cyclic(h1v, n=self.cfg.ngram_n, L=self.cfg.L,
+                           impl=self.cfg.impl)).reshape(-1)
+        else:
+            h = self.fam.pairwise_bits(
+                self.fam.hash_windows_batched(self.fp, tokens)).reshape(-1)
+            hll_regs = self.hll.update(state["hll"], h)
         cms = self.cms.add({**self._cms_params, "table": state["cms"]}, h)
         return {"hll": hll_regs, "cms": cms["table"],
                 "tokens": state["tokens"] + tokens.size}

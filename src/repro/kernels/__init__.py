@@ -1,12 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots (the rolling hash
 itself) and their data-plane consumers.
 
-- cyclic.py       rolling CYCLIC hash: direct-window + parallel-prefix modes
-- general.py      rolling GENERAL hash (clmul shift-reduce, trace-time consts)
-- cyclic_fused.py fused byte->fingerprint (one-hot MXU table lookup + window)
-- bloom.py        Bloom membership probes (decontamination scan)
-- hll.py          HyperLogLog register update (distinct-n-gram telemetry)
-- ops.py          jit wrappers with CPU fallbacks; ref.py pure-jnp oracles
+- cyclic.py        rolling CYCLIC hash: direct-window + parallel-prefix modes
+- general.py       rolling GENERAL hash (clmul shift-reduce, trace-time consts)
+- cyclic_fused.py  fused byte->fingerprint (one-hot MXU table lookup + window)
+- sketch_fused.py  fused hash->sketch epilogues (MinHash / HLL / Bloom state
+                   reduced in VMEM scratch inside the grid loop; window
+                   hashes never round-trip HBM)
+- bloom.py         Bloom membership probes (standalone decontamination scan)
+- hll.py           HyperLogLog register update (standalone telemetry)
+- ops.py           jit wrappers with CPU fallbacks; ref.py pure-jnp oracles
 
 All kernels use pl.pallas_call with explicit BlockSpec VMEM tiling and are
 validated in interpret mode against ref.py across shape/dtype sweeps

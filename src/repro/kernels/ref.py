@@ -7,6 +7,7 @@ enumeration tests in `tests/test_independence.py`.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -71,3 +72,72 @@ def lookup_ref(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
 
 def cyclic_fused_ref(tokens: jnp.ndarray, table: jnp.ndarray, n: int, L: int = 32) -> jnp.ndarray:
     return cyclic_ref(lookup_ref(tokens, table), n, L)
+
+
+# ---------------------------------------------------------------------------
+# Fused sketch-epilogue oracles (mirror kernels/sketch_fused.py). These are
+# also the fast-CPU production path behind ops.cyclic_{minhash,hll,bloom} —
+# one fused jit each, no window-hash round trip through host memory.
+# ---------------------------------------------------------------------------
+
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def _masked_windows(h1v, n: int, L: int, hash_mask: int, n_windows):
+    """(B, S) -> (B, W) window hashes with the Theorem-1 discard applied and
+    a (B,) bool validity mask (global window index < per-row count)."""
+    h = cyclic_ref(h1v, n, L) & np.uint32(hash_mask)
+    idx = jnp.arange(h.shape[-1], dtype=jnp.int32)
+    valid = idx[None, :] < n_windows.astype(jnp.int32)[:, None]
+    return h, valid
+
+
+def minhash_fused_ref(h1v, n_windows, a, b, *, n: int, L: int = 32,
+                      hash_mask: int = 0xFFFFFFFF,
+                      k_chunk: int = 16) -> jnp.ndarray:
+    """(B, S) h1v + (B,) n_windows -> (B, k) MinHash signatures.
+
+    Invalid (padded) windows are excluded from the min entirely, so a padded
+    row's signature is bit-identical to signature_batch on the unpadded doc.
+    The remix is evaluated in k-chunks so the full (B, W, k) expansion never
+    materialises on the CPU path.
+    """
+    h, valid = _masked_windows(h1v, n, L, hash_mask, n_windows)
+    outs = []
+    k = a.shape[0]
+    for s in range(0, k, k_chunk):
+        ac, bc = a[s : s + k_chunk], b[s : s + k_chunk]
+        mixed = ac[None, None, :] * h[:, :, None] + bc[None, None, :]
+        mixed = jnp.where(valid[:, :, None], mixed, _SENTINEL)
+        outs.append(jnp.min(mixed, axis=1))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def hll_fused_ref(h1v, n_windows, *, n: int, b: int, rank_bits: int,
+                  L: int = 32, hash_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
+    """(B, S) h1v -> (2^b,) int32 HLL registers over all valid windows."""
+    h, valid = _masked_windows(h1v, n, L, hash_mask, n_windows)
+    h, valid = h.reshape(-1), valid.reshape(-1)
+    m = 1 << b
+    idx = (h & np.uint32(m - 1)).astype(jnp.int32)
+    rest = h >> np.uint32(b)
+    isolated = rest & (~rest + np.uint32(1))
+    tz = jax.lax.population_count(isolated - np.uint32(1))
+    rank = (jnp.minimum(tz, np.uint32(rank_bits)) + 1).astype(jnp.int32)
+    rank = jnp.where(valid, rank, 0)
+    return jnp.zeros((m,), jnp.int32).at[idx].max(rank)
+
+
+def bloom_fused_ref(h1va, h1vb, n_windows, bits, *, n: int, k: int,
+                    log2_m: int, L: int = 32,
+                    hash_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
+    """Two h1v draws + packed filter -> (B,) int32 valid-window hit counts."""
+    ha, valid = _masked_windows(h1va, n, L, hash_mask, n_windows)
+    hb = cyclic_ref(h1vb, n, L) & np.uint32(hash_mask)
+    hb = hb | np.uint32(1)
+    i = jnp.arange(k, dtype=_U32)
+    probes = (ha[..., None] + i * hb[..., None]) & np.uint32((1 << log2_m) - 1)
+    word = (probes >> np.uint32(5)).astype(jnp.int32)
+    bit = probes & np.uint32(31)
+    hit = jnp.all(((bits[word] >> bit) & np.uint32(1)) == 1, axis=-1)
+    return jnp.sum(hit & valid, axis=-1, dtype=jnp.int32)

@@ -1,0 +1,324 @@
+"""Pallas TPU kernels: rolling CYCLIC hash with *fused sketch epilogues*.
+
+The unfused data-plane computes the full ``(B, S-n+1)`` window-hash array,
+writes it to HBM, and then every sketch re-reads it — MinHash expands it
+k=64x (one affine remix per signature lane), HLL re-reads it for the
+gather/scatter-max register chain, the Bloom scan re-reads it twice (two
+family draws). These kernels instead *reduce the hashes inside the grid
+loop*: the rolling hash of each tile is consumed immediately by the sketch
+epilogue, and only the tiny sketch state (a ``(k,)`` signature row, an
+``(m,)`` register file, a per-row hit count) ever leaves the chip. Window
+hashes never round-trip HBM.
+
+Design (the grid-carried scratch-accumulator idiom):
+
+* The grid is ``(B/block_b, S/block_s)`` exactly as in ``cyclic.py``; each
+  step loads its tile plus an (n-1)-element halo from the next block —
+  expressed as a second BlockSpec view of the same operand.
+* Sketch state lives in a VMEM ``scratch_shapes`` buffer. TPU grids execute
+  sequentially with the last grid dimension innermost, so for each batch
+  block the sequence blocks ``j = 0..gs-1`` arrive in order: the epilogue
+  initialises the scratch at ``j == 0``, folds its tile's contribution with
+  the reduction's own combine (min for MinHash, max for HLL, add for Bloom
+  hit counts), and flushes scratch to the output on the final block. The
+  HLL register file reduces across the *whole* grid (batch blocks too), so
+  it initialises at the very first grid step and flushes at the very last.
+* Masking of padded windows: callers pass per-row valid-window counts
+  (``n_windows``); a window whose global index falls at or beyond that count
+  is *excluded from the reduction outright* — MinHash replaces its remixed
+  values with the ``0xFFFFFFFF`` sentinel AFTER the affine step (pre-remix
+  sentinel substitution would let ``a*SENTINEL+b`` undercut the true min),
+  HLL and Bloom zero the window's contribution (rank 0 / hit 0). A padded
+  row's sketch is therefore bit-identical to the unpadded document's and
+  independent of bucket size. Rows padded up to the batch tile get
+  ``n_windows = 0`` and are sliced off on return.
+* The Theorem-1 discard (``pairwise_bits``) is fused too: ``hash_mask``
+  keeps the low ``L-n+1`` bits inline, so the full-width hash never exists
+  outside a vector register.
+
+VMEM budgets: the MinHash epilogue materialises a ``(block_b, block_s, k)``
+remix tile and the HLL epilogue a ``(block_b*block_s, m)`` one-hot tile, so
+their default ``block_s`` is smaller than the plain hash kernel's; shrink it
+further for large ``k``/``m`` on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cyclic import _rotl_const
+
+_U32 = jnp.uint32
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def _tile_window_hashes(x, halo_src, *, n: int, L: int, block_s: int):
+    """Rolling CYCLIC hashes of one (block_b, block_s) tile (direct mode)."""
+    if n > 1:
+        cat = jnp.concatenate([x, halo_src[:, : n - 1]], axis=1)
+    else:
+        cat = x
+    acc = jnp.zeros_like(x)
+    for k in range(n):
+        acc = acc ^ _rotl_const(cat[:, k : k + block_s], (n - 1 - k) % L, L)
+    return acc
+
+
+def _valid_mask(nw_col, j, shape):
+    """(block_b, block_s) bool: window's global index < its row's count."""
+    widx = j * shape[1] + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return widx < nw_col
+
+
+# ---------------------------------------------------------------------------
+# MinHash epilogue
+# ---------------------------------------------------------------------------
+
+
+def _minhash_kernel(x_ref, nxt_ref, nw_ref, a_ref, b_ref, o_ref, acc_ref, *,
+                    n: int, L: int, block_s: int, hash_mask: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _SENTINEL)
+
+    x = x_ref[...]
+    h = _tile_window_hashes(x, nxt_ref[...], n=n, L=L, block_s=block_s)
+    h = h & np.uint32(hash_mask)
+    valid = _valid_mask(nw_ref[...], j, x.shape)
+    # affine remix per signature lane, reduced over this tile's windows;
+    # invalid (padded) windows are excluded from the min entirely, so the
+    # signature of a padded row is bit-identical to the unpadded one
+    mixed = (a_ref[...][None, None, :] * h[:, :, None]
+             + b_ref[...][None, None, :])                # (bb, bs, k)
+    mixed = jnp.where(valid[:, :, None], mixed, _SENTINEL)
+    acc_ref[...] = jnp.minimum(acc_ref[...], jnp.min(mixed, axis=1))
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "L", "hash_mask", "block_b",
+                                             "block_s", "interpret"))
+def cyclic_minhash_fused(h1v: jnp.ndarray, n_windows: jnp.ndarray,
+                         a: jnp.ndarray, b: jnp.ndarray, *, n: int,
+                         L: int = 32, hash_mask: int = 0xFFFFFFFF,
+                         block_b: int = 8, block_s: int = 512,
+                         interpret: bool = False) -> jnp.ndarray:
+    """h1v (B, S) uint32, n_windows (B,) int32, a/b (k,) -> (B, k) uint32."""
+    assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
+    B, S = h1v.shape
+    k = a.shape[0]
+    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    if n - 1 > block_s:
+        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    x = jnp.pad(h1v.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
+    grid = (Bp // block_b, Sp // block_s)
+    nsb = grid[1]
+
+    out = pl.pallas_call(
+        functools.partial(_minhash_kernel, n=n, L=L, block_s=block_s,
+                          hash_mask=hash_mask),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s),
+                         lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1)),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((k,), lambda bi, j: (0,), memory_space=pltpu.VMEM),
+            pl.BlockSpec((k,), lambda bi, j: (0,), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_b, k), lambda bi, j: (bi, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bp, k), _U32),
+        scratch_shapes=[pltpu.VMEM((block_b, k), _U32)],
+        interpret=interpret,
+    )(x, x, nw, a.astype(_U32), b.astype(_U32))
+    return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# HyperLogLog epilogue
+# ---------------------------------------------------------------------------
+
+
+def _hll_kernel(x_ref, nxt_ref, nw_ref, o_ref, acc_ref, *, n: int, L: int,
+                block_s: int, hash_mask: int, b: int, rank_bits: int):
+    bi, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((bi == 0) & (j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    h = _tile_window_hashes(x, nxt_ref[...], n=n, L=L, block_s=block_s)
+    h = (h & np.uint32(hash_mask)).reshape(-1)
+    valid = _valid_mask(nw_ref[...], j, x.shape).reshape(-1)
+    m = 1 << b
+    idx = (h & np.uint32(m - 1)).astype(jnp.int32)
+    rest = h >> np.uint32(b)
+    isolated = rest & (~rest + np.uint32(1))
+    tz = jax.lax.population_count(isolated - np.uint32(1))
+    rank = (jnp.minimum(tz, np.uint32(rank_bits)) + 1).astype(jnp.int32)
+    rank = jnp.where(valid, rank, 0)                    # rank 0 never wins
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (idx.shape[0], m), 1))
+    partial = jnp.where(onehot, rank[:, None], 0).max(axis=0)
+    acc_ref[...] = jnp.maximum(acc_ref[...], partial)
+
+    @pl.when((bi == pl.num_programs(0) - 1) & (j == pl.num_programs(1) - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "L", "hash_mask", "b",
+                                             "rank_bits", "block_b",
+                                             "block_s", "interpret"))
+def cyclic_hll_fused(h1v: jnp.ndarray, n_windows: jnp.ndarray, *, n: int,
+                     b: int, rank_bits: int, L: int = 32,
+                     hash_mask: int = 0xFFFFFFFF, block_b: int = 8,
+                     block_s: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """h1v (B, S) uint32, n_windows (B,) int32 -> (2^b,) int32 registers."""
+    assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
+    B, S = h1v.shape
+    m = 1 << b
+    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    # bound the (block_b*block_s, m) one-hot reduction tile to ~4 MB of
+    # VMEM: at the production m=4096 the default tiles would need 32 MB,
+    # which no core has — shrink block_s (the halo still sets a floor)
+    cap = max(32, (4 << 20) // (4 * m * block_b))
+    cap = 1 << int(np.floor(np.log2(cap)))
+    if n > 1 and n - 1 > cap:
+        cap = 1 << int(np.ceil(np.log2(n - 1)))
+    block_s = min(block_s, cap)
+    if n - 1 > block_s:
+        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    x = jnp.pad(h1v.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
+    grid = (Bp // block_b, Sp // block_s)
+    nsb = grid[1]
+
+    return pl.pallas_call(
+        functools.partial(_hll_kernel, n=n, L=L, block_s=block_s,
+                          hash_mask=hash_mask, b=b, rank_bits=rank_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s),
+                         lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1)),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda bi, j: (0,),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((m,), jnp.int32)],
+        interpret=interpret,
+    )(x, x, nw)
+
+
+# ---------------------------------------------------------------------------
+# Bloom-probe epilogue (decontamination hit counts)
+# ---------------------------------------------------------------------------
+
+
+def _bloom_kernel(xa_ref, nxa_ref, xb_ref, nxb_ref, nw_ref, bits_ref, o_ref,
+                  acc_ref, *, n: int, L: int, block_s: int, hash_mask: int,
+                  k: int, log2_m: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xa = xa_ref[...]
+    ha = _tile_window_hashes(xa, nxa_ref[...], n=n, L=L, block_s=block_s)
+    hb = _tile_window_hashes(xb_ref[...], nxb_ref[...], n=n, L=L,
+                             block_s=block_s)
+    ha = ha & np.uint32(hash_mask)
+    hb = (hb & np.uint32(hash_mask)) | np.uint32(1)     # odd probe stride
+    valid = _valid_mask(nw_ref[...], j, xa.shape)
+    bits = bits_ref[...]
+    m_mask = np.uint32((1 << log2_m) - 1)
+    hit = jnp.ones(ha.shape, dtype=jnp.bool_)
+    for i in range(k):
+        probe = (ha + np.uint32(i) * hb) & m_mask
+        word = (probe >> np.uint32(5)).astype(jnp.int32)
+        bit = probe & np.uint32(31)
+        got = jnp.take(bits, word.reshape(-1), axis=0).reshape(word.shape)
+        hit = hit & (((got >> bit) & np.uint32(1)) == 1)
+    cnt = jnp.sum(jnp.where(valid, hit, False).astype(jnp.int32), axis=1,
+                  keepdims=True)
+    acc_ref[...] = acc_ref[...] + cnt
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "L", "hash_mask", "k",
+                                             "log2_m", "block_b", "block_s",
+                                             "interpret"))
+def cyclic_bloom_fused(h1va: jnp.ndarray, h1vb: jnp.ndarray,
+                       n_windows: jnp.ndarray, bits: jnp.ndarray, *, n: int,
+                       k: int, log2_m: int, L: int = 32,
+                       hash_mask: int = 0xFFFFFFFF, block_b: int = 8,
+                       block_s: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    """Two h1v draws (B, S) + packed filter (2^log2_m/32,) -> (B,) int32
+    counts of valid windows whose double-hashed probes all hit."""
+    assert h1va.shape == h1vb.shape and h1va.ndim == 2
+    assert bits.shape == (1 << (log2_m - 5),)
+    B, S = h1va.shape
+    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    if n - 1 > block_s:
+        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    xa = jnp.pad(h1va.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    xb = jnp.pad(h1vb.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
+    grid = (Bp // block_b, Sp // block_s)
+    nsb = grid[1]
+    halo = lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1))
+
+    out = pl.pallas_call(
+        functools.partial(_bloom_kernel, n=n, L=L, block_s=block_s,
+                          hash_mask=hash_mask, k=k, log2_m=log2_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s), halo, memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s), halo, memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
+                         memory_space=pltpu.VMEM),
+            # full filter resident per grid step
+            pl.BlockSpec((bits.shape[0],), lambda bi, j: (0,),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.int32)],
+        interpret=interpret,
+    )(xa, xa, xb, xb, nw, bits)
+    return out[:B, 0]

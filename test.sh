@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 verify entry point.
+#
+# PYTHONPATH=src           — the package lives under src/ (no install step).
+# XLA_FLAGS=...device_count=8 — expose 8 virtual CPU devices so the
+#   distributed-path tests (sharded train step, mesh resolution) exercise a
+#   real multi-device partitioning instead of silently collapsing to 1.
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+exec python -m pytest -x -q "$@"

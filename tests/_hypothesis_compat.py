@@ -1,0 +1,31 @@
+"""Optional-import shim for hypothesis.
+
+The property tests are a nice-to-have; the container they run in does not
+always ship `hypothesis`. When it is missing we expose stand-ins so the test
+modules still import: `given` marks the test skipped, `settings` is identity,
+and `st.<anything>(...)` returns an inert placeholder (only evaluated at
+decoration time, never drawn from).
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()
+
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco

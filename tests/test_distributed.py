@@ -142,6 +142,8 @@ def test_dryrun_cell_on_debug_mesh():
         lowered = step.lower(shapes, batch)
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older-JAX per-device form
+            cost = cost[0]
         assert cost.get("flops", 0) > 0
         text = compiled.as_text()
         coll = hlo_analysis.collective_bytes(text)

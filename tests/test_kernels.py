@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import gf2, make_family
 from repro.kernels import ref
@@ -137,8 +137,11 @@ def test_bloom_kernel_vs_ref(B, S, k, log2_m):
                       block_s=256, interpret=True)
     want = bloom_probe_ref(ha, hb, bits, k=k, log2_m=log2_m)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    if k <= 4:  # hit prob ~0.25^k — only meaningfully non-degenerate for small k
-        assert bool(got.any()) and not bool(got.all())
+    # hit prob ~0.25^k: with k=2 (~60 expected hits) requiring a hit is
+    # sound; at k=4 (~4 expected) the fixed seed legitimately yields zero
+    if k <= 2:
+        assert bool(got.any())
+    assert not bool(got.all())
 
 
 def test_bloom_kernel_agrees_with_core_filter():

@@ -1,0 +1,215 @@
+"""Fused hash->sketch path validation.
+
+Three layers of parity, all bit-exact:
+* kernels/sketch_fused.py (interpret mode) vs kernels/ref.py oracles;
+* ops dispatch (ref + pallas) vs the *seed* data-plane formulations
+  (signature_batch, HyperLogLog.update, BloomFilter.contains);
+* the batched dedup/stats/decontam services vs their streaming/unfused
+  counterparts (padded and unpadded document lengths).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BloomFilter, HyperLogLog, MinHash, make_family
+from repro.data.dedup import (DedupConfig, MinHashDeduper, signature_batch,
+                              signature_batch_fused)
+from repro.kernels import ops, ref
+from repro.kernels.sketch_fused import (cyclic_bloom_fused, cyclic_hll_fused,
+                                        cyclic_minhash_fused)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _h1v(shape, seed=0):
+    return jax.random.bits(jax.random.PRNGKey(seed), shape, dtype=jnp.uint32)
+
+
+def _mh_params(k, seed=1):
+    mh = MinHash(k=k)
+    return mh.init(jax.random.PRNGKey(seed))
+
+
+# ---------------------------------------------------------------------------
+# kernel (interpret) vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,n,k,bb,bs", [
+    (1, 512, 4, 16, 8, 256),
+    (3, 1000, 8, 64, 2, 256),     # non-divisible B and S -> padding path
+    (8, 2048, 25, 64, 8, 512),    # paper's max n
+    (2, 300, 1, 8, 8, 256),       # n=1 (no halo)
+    (2, 700, 5, 32, 8, 256),      # multi-block sequence
+])
+def test_minhash_kernel_vs_ref(B, S, n, k, bb, bs):
+    x = _h1v((B, S), seed=n)
+    p = _mh_params(k)
+    hm = (1 << (32 - n + 1)) - 1
+    nw = jnp.asarray(
+        np.random.default_rng(n).integers(0, S - n + 2, size=B), jnp.int32)
+    got = cyclic_minhash_fused(x, nw, p["a"], p["b"], n=n, hash_mask=hm,
+                               block_b=bb, block_s=bs, interpret=True)
+    want = ref.minhash_fused_ref(x, nw, p["a"], p["b"], n=n, hash_mask=hm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,S,n,b,bb,bs", [
+    (2, 512, 4, 8, 2, 256),
+    (3, 700, 8, 10, 2, 256),
+    (9, 1024, 25, 6, 4, 256),
+])
+def test_hll_kernel_vs_ref(B, S, n, b, bb, bs):
+    x = _h1v((B, S), seed=7 * n + b)
+    rank_bits = (32 - n + 1) - b
+    hm = (1 << (32 - n + 1)) - 1
+    nw = jnp.asarray(
+        np.random.default_rng(b).integers(0, S - n + 2, size=B), jnp.int32)
+    got = cyclic_hll_fused(x, nw, n=n, b=b, rank_bits=rank_bits, hash_mask=hm,
+                           block_b=bb, block_s=bs, interpret=True)
+    want = ref.hll_fused_ref(x, nw, n=n, b=b, rank_bits=rank_bits,
+                             hash_mask=hm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,S,n,k,log2_m", [(2, 512, 8, 4, 16),
+                                            (3, 300, 5, 2, 14)])
+def test_bloom_kernel_vs_ref(B, S, n, k, log2_m):
+    xa, xb = _h1v((B, S), seed=1), _h1v((B, S), seed=2)
+    bits = jax.random.bits(jax.random.PRNGKey(3), (1 << (log2_m - 5),),
+                           dtype=jnp.uint32)
+    hm = (1 << (32 - n + 1)) - 1
+    nw = jnp.full((B,), S - n + 1, jnp.int32)
+    got = cyclic_bloom_fused(xa, xb, nw, bits, n=n, k=k, log2_m=log2_m,
+                             hash_mask=hm, block_b=2, block_s=256,
+                             interpret=True)
+    want = ref.bloom_fused_ref(xa, xb, nw, bits, n=n, k=k, log2_m=log2_m,
+                               hash_mask=hm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# acceptance parity: fused MinHash == signature_batch, n in {2, 8, 25},
+# padded and unpadded lengths, both impls
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 8, 25])
+@pytest.mark.parametrize("impl,tile", [("ref", {}),
+                                       ("pallas", dict(block_b=2,
+                                                       block_s=256))])
+def test_fused_signature_matches_signature_batch(n, impl, tile):
+    fam = make_family("cyclic", n=n, L=32)
+    params = fam.init(KEY, 4096)
+    mh = MinHash(k=64)
+    mhp = mh.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (3, 300), 0, 4096)
+    want = signature_batch(fam, params, mh, mhp, toks)
+    h1v = params["h1"][toks]
+    got = ops.cyclic_minhash(h1v, mhp["a"], mhp["b"], n=n, impl=impl, **tile)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # padded: same rows embedded in longer buffers, masked via n_windows —
+    # signatures must be bit-identical to the unpadded ones
+    h1vp = params["h1"][jnp.pad(toks, ((0, 0), (0, 212)))]
+    nw = jnp.full((3,), 300 - n + 1, jnp.int32)
+    gotp = ops.cyclic_minhash(h1vp, mhp["a"], mhp["b"], n=n, n_windows=nw,
+                              impl=impl, **tile)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(gotp))
+    # signature_batch_fused wrapper (the pipeline-facing entry point)
+    got_w = signature_batch_fused(fam, params, mh, mhp, toks, impl=impl)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got_w))
+
+
+@pytest.mark.parametrize("impl,tile", [("ref", {}),
+                                       ("pallas", dict(block_b=2,
+                                                       block_s=256))])
+def test_fused_hll_matches_core_update(impl, tile):
+    n = 8
+    fam = make_family("cyclic", n=n, L=32)
+    params = fam.init(KEY, 4096)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (4, 500), 0, 4096)
+    h = fam.pairwise_bits(fam.hash_windows_batched(params, toks)).reshape(-1)
+    hll = HyperLogLog(b=10, hash_bits=fam.out_bits)
+    want = hll.update(hll.init(), h)
+    got = ops.cyclic_hll(params["h1"][toks], n=n, b=10, impl=impl, **tile)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("impl,tile", [("ref", {}),
+                                       ("pallas", dict(block_b=2,
+                                                       block_s=256))])
+def test_fused_bloom_matches_core_contains(impl, tile):
+    n = 8
+    fa = make_family("cyclic", n=n, L=32)
+    fb = make_family("cyclic", n=n, L=32)
+    pa = fa.init(jax.random.PRNGKey(7), 4096)
+    pb = fb.init(jax.random.PRNGKey(8), 4096)
+    toks = jax.random.randint(jax.random.PRNGKey(9), (4, 500), 0, 4096)
+    bf = BloomFilter(log2_m=16, k=4)
+    ha = fa.pairwise_bits(fa.hash_windows_batched(pa, toks))
+    hb = fb.pairwise_bits(fb.hash_windows_batched(pb, toks))
+    bits = bf.add(bf.init(), ha[:2].reshape(-1), hb[:2].reshape(-1))
+    want = np.asarray(bf.contains(bits, ha, hb).sum(axis=-1)).astype(np.int32)
+    got = ops.cyclic_bloom(pa["h1"][toks], pb["h1"][toks], bits, n=n, k=4,
+                           log2_m=16, impl=impl, **tile)
+    np.testing.assert_array_equal(want, np.asarray(got))
+    assert want.max() > 0          # the filter contains rows 0-1: real hits
+
+
+# ---------------------------------------------------------------------------
+# batched dedup data-plane
+# ---------------------------------------------------------------------------
+
+def _docs(n_docs=120, seed=5):
+    from repro.data.corpus import CorpusSpec, documents
+    spec = CorpusSpec(n_docs=n_docs, dup_rate=0.25, mutate_frac=0.01,
+                      seed=seed, vocab=8192)
+    return documents(spec)[0]
+
+
+def test_signature_many_matches_per_doc_paths():
+    docs = _docs(40)
+    dd = MinHashDeduper(DedupConfig(vocab=8192))
+    sigs = dd.signature_many(docs)
+    for i in (0, 7, 19, 39):
+        np.testing.assert_array_equal(sigs[i], dd.signature(docs[i]))
+        np.testing.assert_array_equal(sigs[i], dd.signature_unfused(docs[i]))
+
+
+def test_add_batch_matches_streaming_exactly():
+    docs = _docs(120)
+    cfg = DedupConfig(vocab=8192, threshold=0.5)
+    stream, batch = MinHashDeduper(cfg), MinHashDeduper(cfg)
+    f_stream = np.array([stream.check_and_add(d)[0] for d in docs])
+    f_batch = batch.add_batch(docs)
+    np.testing.assert_array_equal(f_stream, f_batch)
+    assert len(stream) == len(batch)
+    for x, y in zip(stream._sigs, batch._sigs):
+        np.testing.assert_array_equal(x, y)
+    assert stream._bands == batch._bands
+    assert f_batch.sum() > 0       # planted duplicates were found
+
+
+def test_add_batch_then_streaming_composes():
+    docs = _docs(80, seed=11)
+    cfg = DedupConfig(vocab=8192, threshold=0.5)
+    stream, mixed = MinHashDeduper(cfg), MinHashDeduper(cfg)
+    f_stream = np.array([stream.check_and_add(d)[0] for d in docs])
+    f_head = mixed.add_batch(docs[:40])
+    f_tail = np.array([mixed.check_and_add(d)[0] for d in docs[40:]])
+    np.testing.assert_array_equal(f_stream, np.r_[f_head, f_tail])
+
+
+def test_batch_for_step_gather_matches_loop():
+    from repro.data.pipeline import PackedCorpus, PipelineConfig
+    cfg = PipelineConfig(seq_len=128, batch_size=8, dedup=False, seed=3)
+    pc = PackedCorpus(cfg)
+    got = pc.batch_for_step(step=4)
+    # the seed's per-row slicing loop, inlined as the oracle
+    n_rows = max(1, (len(pc.stream) - 1) // cfg.seq_len)
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, 4, cfg.host_id]))
+    rows = rng.integers(0, n_rows, size=cfg.batch_size)
+    want = np.stack([
+        pc.stream[r * cfg.seq_len : r * cfg.seq_len + cfg.seq_len]
+        for r in rows]).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
