@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement) and also
 writes a machine-readable JSON map ``{name: us_per_call}`` so the perf
-trajectory is tracked PR over PR (default ``BENCH_pr1.json`` at the repo
+trajectory is tracked PR over PR (default ``BENCH_pr2.json`` at the repo
 root; override the path with REPRO_BENCH_JSON).
 
 Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
@@ -47,7 +47,7 @@ def main() -> None:
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr1.json"))
+                     "BENCH_pr2.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

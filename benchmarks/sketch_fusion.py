@@ -1,19 +1,28 @@
-"""Fused vs unfused MinHash signature throughput (docs/sec).
+"""Fused vs unfused MinHash signature throughput (docs/sec), and the plan
+engine's multi-sketch single pass vs three separate passes.
 
 The unfused baseline is the seed architecture: one jit call per document,
 window-hash array materialised then re-mixed k times. The fused path signs
-the whole document set with one ``ops.cyclic_minhash`` call per shape
-bucket (hash + Theorem-1 discard + remix + min in a single device pass).
-Both paths produce bit-identical signatures — asserted here so the speedup
-is never measured against a semantically different computation.
+the whole document set with one plan execution per shape bucket (hash +
+Theorem-1 discard + remix + min in a single device pass). The plan section
+then executes MinHash + HLL + Bloom from ONE ``api.run`` call against the
+same three sketches as three single-sketch plans (three rolling-hash
+passes). All compared paths produce bit-identical outputs — asserted here
+so a speedup is never measured against a semantically different
+computation.
 """
 from __future__ import annotations
 
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.kernels import api
+from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
 
 
 def _timeit(fn, reps=3):
@@ -69,7 +78,58 @@ def run(n_docs: int = 256, doc_len: int = 1024):
                  "us_per_call": t_batch * 1e6,
                  "derived": f"{n_docs / t_batch:.1f} docs/s; "
                             f"{t_stream / t_batch:.1f}x vs streaming"})
+    rows.extend(_multi_sketch_rows())
     return rows
+
+
+def _multi_sketch_rows(B: int = 64, S: int = 2048):
+    """MinHash+HLL+Bloom from one plan execution vs three separate passes."""
+    key = jax.random.PRNGKey(0)
+    ka, kb, kx, ky, kbits = jax.random.split(key, 5)
+    h1v = jax.random.bits(kx, (B, S), dtype=jnp.uint32)
+    h1v_b = jax.random.bits(ky, (B, S), dtype=jnp.uint32)
+    a = jax.random.bits(ka, (64,), dtype=jnp.uint32) | np.uint32(1)
+    b = jax.random.bits(kb, (64,), dtype=jnp.uint32)
+    bits = jax.random.bits(kbits, (1 << 15,), dtype=jnp.uint32)
+    hs = HashSpec(family="cyclic", n=8, L=32)
+    multi = SketchPlan(hs, (("sig", MinHashSpec(k=64)),
+                            ("card", HLLSpec(b=12)),
+                            ("dec", BloomSpec(k=4, log2_m=20))))
+    operands = {"sig": {"a": a, "b": b}, "dec": {"bits": bits}}
+
+    def one_pass():
+        return api.run(multi, h1v, h1v_b=h1v_b, operands=operands)
+
+    def three_passes():
+        return {
+            "sig": api.run(SketchPlan(hs, (("sig", MinHashSpec(k=64)),)),
+                           h1v, operands={"sig": operands["sig"]})["sig"],
+            "card": api.run(SketchPlan(hs, (("card", HLLSpec(b=12)),)),
+                            h1v)["card"],
+            "dec": api.run(SketchPlan(hs, (("dec", BloomSpec(k=4,
+                                                             log2_m=20)),)),
+                           h1v, h1v_b=h1v_b,
+                           operands={"dec": operands["dec"]})["dec"],
+        }
+
+    got, want = one_pass(), three_passes()        # warmup + parity
+    for name in ("sig", "card", "dec"):
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]))
+
+    block = lambda fn: jax.block_until_ready(list(fn().values()))
+    t_one = _timeit(lambda: block(one_pass))
+    t_three = _timeit(lambda: block(three_passes))
+    wins = B * (S - 8 + 1)
+    return [
+        {"name": f"sketch_plan_three_passes_{B}x{S}",
+         "us_per_call": t_three * 1e6,
+         "derived": f"{wins / t_three / 1e6:.1f} Mwin/s"},
+        {"name": f"sketch_plan_multi_sketch_one_pass_{B}x{S}",
+         "us_per_call": t_one * 1e6,
+         "derived": f"{wins / t_one / 1e6:.1f} Mwin/s; "
+                    f"{t_three / t_one:.1f}x vs three passes"},
+    ]
 
 
 if __name__ == "__main__":

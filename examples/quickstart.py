@@ -6,8 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HyperLogLog, make_family
+from repro.core import HyperLogLog, MinHash, make_family
 from repro.core import independence as ind
+from repro.kernels import api
+from repro.kernels.plan import HashSpec, HLLSpec, MinHashSpec, SketchPlan
 
 key = jax.random.PRNGKey(0)
 text = b"recursive n-gram hashing is pairwise independent, at best"
@@ -49,3 +51,26 @@ wins = np.lib.stride_tricks.sliding_window_view(np.asarray(big), 8)
 truth = len({w.tobytes() for w in wins})
 print(f"HLL estimate: {est:,.0f}   exact: {truth:,}   "
       f"error: {abs(est-truth)/truth:.2%}  (1KB of state vs {truth*8/1e6:.1f}MB)")
+
+print("\n=== 4. The production data-plane: one pass, every sketch ===")
+# Declarative SketchPlan: the family is a parameter (cyclic | general), and
+# MinHash signatures + HLL registers come out of ONE rolling-hash device
+# pass (api.run) instead of one pass per sketch.
+mh = MinHash(k=16)
+mhp = mh.init(jax.random.PRNGKey(1))
+plan = SketchPlan(hash=HashSpec(family="cyclic", n=8, L=32),
+                  sketches={"sig": MinHashSpec(k=16), "card": HLLSpec(b=10)})
+out = api.run(plan, fam8._lookup(p8, big[None, :]),
+              operands={"sig": {"a": mhp["a"], "b": mhp["b"]}})
+est_plan = float(hll.estimate(out["card"]))
+print(f"plan {plan.hash.family}/n={plan.hash.n}: MinHash sig {out['sig'].shape}, "
+      f"HLL estimate {est_plan:,.0f} — one fused pass for both")
+assert est_plan == est                     # same registers as the §3 pass
+gplan = SketchPlan(hash=HashSpec(family="general", n=8, L=32),
+                   sketches={"sig": MinHashSpec(k=16)})
+gfam = make_family("general", n=8, L=32)
+gp = gfam.init(key, 256)
+gout = api.run(gplan, gfam._lookup(gp, big[None, :]),
+               operands={"sig": {"a": mhp["a"], "b": mhp["b"]}})
+print(f"same plan, GENERAL family (p={hex(gplan.hash.p)}): "
+      f"sig {gout['sig'].shape} — swap the family, keep the pipeline")

@@ -6,11 +6,12 @@ hit above `max_hit_frac` is flagged. Bloom FPR analysis assumes independent
 probe positions — supplied here by two independent CYCLIC draws feeding
 double hashing (pairwise independence per Theorem 1).
 
-The scan is fused (``ops.cyclic_bloom``): both rolling hashes, the
-Theorem-1 discard, the k double-hashed probes against the VMEM-resident
-filter, and the per-row hit-count reduction happen in one device pass —
-only a (B,) count vector leaves the chip. The one-time eval-set *add* keeps
-the jnp scatter-OR path (it runs once per eval set, not per batch).
+The scan is fused behind a one-Bloom :class:`SketchPlan` built once at
+construction (``api.run``): both rolling hashes, the Theorem-1 discard, the
+k double-hashed probes against the VMEM-resident filter, and the per-row
+hit-count reduction happen in one device pass — only a (B,) count vector
+leaves the chip. The one-time eval-set *add* keeps the jnp scatter-OR path
+(it runs once per eval set, not per batch).
 """
 from __future__ import annotations
 
@@ -22,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BloomFilter, make_family
-from repro.kernels import ops
+from repro.kernels import api
+from repro.kernels.plan import BloomSpec, HashSpec, SketchPlan
 
 
 @dataclasses.dataclass
@@ -48,6 +50,18 @@ class Decontaminator:
         self.pb = self.fam_b.init(kb, cfg.vocab)
         self.bloom = BloomFilter(log2_m=cfg.log2_m, k=cfg.k)
         self.bits = self.bloom.init()
+        # the fused scan plan, built ONCE (hoisted out of _scan_impl so the
+        # per-batch call re-uses the same jit trace key)
+        self.plan = SketchPlan(
+            HashSpec(family="cyclic", n=cfg.ngram_n, L=cfg.L, discard=True),
+            (("bloom", BloomSpec(k=cfg.k, log2_m=cfg.log2_m)),))
+        # Theorem-1 consistency: the probes the scan computes on-device must
+        # draw from exactly the bits the families declare pairwise
+        # independent (what the eval-set add used)
+        assert self.plan.hash.out_bits == self.fam_a.out_bits, (
+            self.plan.hash.out_bits, self.fam_a.out_bits)
+        assert self.plan.hash.out_bits == self.fam_b.out_bits, (
+            self.plan.hash.out_bits, self.fam_b.out_bits)
         self._add = jax.jit(self._add_impl)
         self._scan = jax.jit(self._scan_impl)
 
@@ -64,11 +78,11 @@ class Decontaminator:
 
     def _scan_impl(self, bits, tokens):
         # fused: double rolling hash + probes + per-row count, on-chip
-        counts = ops.cyclic_bloom(
-            self.fam_a._lookup(self.pa, tokens),
-            self.fam_b._lookup(self.pb, tokens),
-            bits, n=self.cfg.ngram_n, L=self.cfg.L, k=self.cfg.k,
-            log2_m=self.cfg.log2_m, impl=self.cfg.impl)
+        counts = api.run(
+            self.plan, self.fam_a._lookup(self.pa, tokens),
+            h1v_b=self.fam_b._lookup(self.pb, tokens),
+            operands={"bloom": {"bits": bits}},
+            impl=self.cfg.impl)["bloom"]
         W = tokens.shape[-1] - self.cfg.ngram_n + 1
         return counts.astype(jnp.float32) / np.float32(W)
 

@@ -6,14 +6,15 @@ near-duplicate. Pairwise independence of the window hashes is exactly what
 makes the MinHash collision estimator unbiased, and it is the property the
 paper proves CYCLIC (after the (n-1)-bit discard) to have.
 
-The data-plane is *batched and fused*: documents are bucket-padded into
-(D, S) batches and signed by one ``ops.cyclic_minhash`` call per bucket —
-the rolling hash, the Theorem-1 discard, and the k-lane affine remix + min
-all happen in a single device pass (kernels/sketch_fused.py on TPU, one
-fused jit on CPU), so the (D, S-n+1) window-hash array and its k=64x MinHash
-expansion never round-trip HBM. Padded windows are excluded from the min
-outright, making a padded row's signature bit-identical to the unpadded
-document's — signatures are independent of bucket size.
+The data-plane is *batched and fused*: a one-MinHash :class:`SketchPlan`
+is built once at construction and documents are bucket-padded into (D, S)
+batches signed by one ``api.run(plan, ...)`` call per bucket — the rolling
+hash (CYCLIC or GENERAL), the Theorem-1 discard, and the k-lane affine
+remix + min all happen in a single device pass (kernels/sketch_fused.py on
+TPU, one fused jit on CPU), so the (D, S-n+1) window-hash array and its
+k=64x MinHash expansion never round-trip HBM. Padded windows are excluded
+from the min outright, making a padded row's signature bit-identical to the
+unpadded document's — signatures are independent of bucket size.
 
 Operating modes:
 * :meth:`MinHashDeduper.add_batch`  — batched corpus dedup: one signing pass
@@ -36,10 +37,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Cyclic, MinHash, make_family
-from repro.kernels import ops
+from repro.core import Cyclic, General, MinHash, make_family
+from repro.kernels import api
+from repro.kernels import ref as kref
+from repro.kernels.plan import HashSpec, MinHashSpec, SketchPlan
 
 _SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def _plan_for_family(fam, k: int) -> Optional[SketchPlan]:
+    """One-MinHash SketchPlan for a fused-capable family, else None.
+
+    CYCLIC and GENERAL ride the fused engine (``api.run``); other paper
+    families (THREEWISE, ID37, ...) keep the generic unfused fallback.
+    """
+    if isinstance(fam, Cyclic):
+        hs = HashSpec(family="cyclic", n=fam.n, L=fam.L, discard=True)
+    elif isinstance(fam, General):
+        hs = HashSpec(family="general", n=fam.n, L=fam.L, p=fam.p)
+    else:
+        return None
+    return SketchPlan(hs, (("sig", MinHashSpec(k=k)),))
 
 
 @dataclasses.dataclass
@@ -73,6 +91,9 @@ class MinHashDeduper:
         self.fam_params = self.fam.init(k1, cfg.vocab)
         self.mh = MinHash(k=cfg.n_signatures)
         self.mh_params = self.mh.init(k2)
+        # the fused hash->sketch plan, built ONCE (it is the jit trace key);
+        # None for families the fused engine does not cover
+        self.plan = _plan_for_family(self.fam, cfg.n_signatures)
         self._bands: List[Dict[bytes, List[int]]] = [
             {} for _ in range(cfg.lsh_bands)]
         self._sigs: List[np.ndarray] = []
@@ -84,22 +105,22 @@ class MinHashDeduper:
     def _signature_batch_impl(self, tokens: jnp.ndarray,
                               n_windows: jnp.ndarray) -> jnp.ndarray:
         """(D, S) bucket-padded batch + (D,) valid-window counts -> (D, k)."""
-        if isinstance(self.fam, Cyclic):
+        if self.plan is not None:
             h1v = self.fam._lookup(self.fam_params, tokens)
-            return ops.cyclic_minhash(
-                h1v, self.mh_params["a"], self.mh_params["b"],
-                n=self.cfg.ngram_n, L=self.cfg.L, n_windows=n_windows,
-                discard=True, impl=self.cfg.impl)
-        # generic-family fallback: unfused hash, same masked-min epilogue
+            return api.run(
+                self.plan, h1v, n_windows=n_windows,
+                operands={"sig": {"a": self.mh_params["a"],
+                                  "b": self.mh_params["b"]}},
+                impl=self.cfg.impl)["sig"]
+        # generic-family fallback: unfused hash, then the engine's own
+        # masked-min epilogue (k-chunked; sentinel applied post-remix)
         h = self.fam.hash_windows_batched(self.fam_params, tokens)
         if hasattr(self.fam, "pairwise_bits"):
             h = self.fam.pairwise_bits(h)
         idx = jnp.arange(h.shape[-1], dtype=jnp.int32)
         valid = idx[None, :] < n_windows.astype(jnp.int32)[:, None]
-        mixed = (self.mh_params["a"][None, :, None] * h[:, None, :]
-                 + self.mh_params["b"][None, :, None])
-        mixed = jnp.where(valid[:, None, :], mixed, _SENTINEL)
-        return jnp.min(mixed, axis=-1)
+        return kref.minhash_reduce(h, valid, self.mh_params["a"],
+                                   self.mh_params["b"])
 
     def _signature_unfused_impl(self, tokens: jnp.ndarray,
                                 n_windows) -> jnp.ndarray:
@@ -216,8 +237,8 @@ class MinHashDeduper:
         for i in range(D):
             cands = set(index_cand[i])
             cands.update(gid[j] for j in batch_cand[i] if gid[j] is not None)
-            best_j, _ = self._best_match(sigs[i], sorted(cands))
-            if best_j >= self.cfg.threshold:
+            best_j, best_id = self._best_match(sigs[i], sorted(cands))
+            if best_id is not None and best_j >= self.cfg.threshold:
                 flags[i] = True
             else:
                 gid[i] = self._insert(sigs[i],
@@ -261,15 +282,17 @@ def signature_batch_fused(fam, fam_params, mh: MinHash, mh_params,
                           impl: str = "auto") -> jnp.ndarray:
     """Fused device-side batched signatures: (B, S) -> (B, k) uint32.
 
-    CYCLIC families route through ops.cyclic_minhash (single device pass);
-    other families fall back to the unfused reference. Bit-identical to
-    :func:`signature_batch` for unpadded input.
+    CYCLIC and GENERAL families route through the plan engine (``api.run``,
+    single device pass); other families fall back to the unfused reference.
+    Bit-identical to :func:`signature_batch` for unpadded input.
     """
-    if isinstance(fam, Cyclic):
+    plan = _plan_for_family(fam, mh.k)
+    if plan is not None:
         h1v = fam._lookup(fam_params, tokens)
-        return ops.cyclic_minhash(h1v, mh_params["a"], mh_params["b"],
-                                  n=fam.n, L=fam.L, n_windows=n_windows,
-                                  discard=True, impl=impl)
+        return api.run(plan, h1v, n_windows=n_windows,
+                       operands={"sig": {"a": mh_params["a"],
+                                         "b": mh_params["b"]}},
+                       impl=impl)["sig"]
     return signature_batch(fam, fam_params, mh, mh_params, tokens)
 
 

@@ -33,6 +33,11 @@ class PipelineConfig:
     dedup: bool = True
     host_id: int = 0
     num_hosts: int = 1
+    # hash data-plane knobs, threaded into the services' SketchPlans: the
+    # family is a first-class swappable parameter ("cyclic" | "general"),
+    # not a function-name prefix; impl picks the kernel dispatch
+    hash_family: str = "cyclic"
+    impl: str = "auto"
 
 
 class PackedCorpus:
@@ -44,7 +49,9 @@ class PackedCorpus:
         docs, dup_of = documents(spec)
         self.n_duplicates = 0
         if cfg.dedup:
-            dd = MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed))
+            dd = MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed,
+                                            family=cfg.hash_family,
+                                            impl=cfg.impl))
             # one fused signing pass per shape bucket + vectorized LSH
             # probing — not one device call per document
             flags = dd.add_batch(docs)

@@ -4,8 +4,9 @@ Per training batch (on-device, jit): rolling CYCLIC hashes -> HyperLogLog
 distinct-n-gram registers + CountMin heavy-hitter counts. State is a small
 pytree that lives beside the train state and is checkpointed with it.
 
-The HLL leg routes through the fused hash->sketch path
-(``ops.cyclic_hll``): on TPU the register maxima are reduced in VMEM scratch
+The HLL leg routes through the fused hash->sketch engine: a one-HLL
+:class:`SketchPlan` is built once at construction and executed per batch
+with ``api.run`` — on TPU the register maxima are reduced in VMEM scratch
 inside the rolling-hash grid, so only the (m,) register file leaves the chip
 per batch. CountMin keeps the jnp scatter-add epilogue (XLA scatter has an
 add combiner; there is no efficient in-kernel histogram over a 2^16-wide
@@ -21,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CountMinSketch, Cyclic, HyperLogLog, make_family
-from repro.kernels import ops
+from repro.kernels import api, ops
+from repro.kernels.plan import HashSpec, HLLSpec, SketchPlan
 
 
 @dataclasses.dataclass
@@ -48,6 +50,16 @@ class NgramStats:
         self.cms = CountMinSketch(depth=cfg.cms_depth,
                                   log2_width=cfg.cms_log2_width)
         self._cms_params = self.cms.init(kc)
+        # the fused HLL plan, built ONCE (hoisted out of the per-batch
+        # update; it is the jit trace key)
+        self.plan = SketchPlan(
+            HashSpec(family="cyclic", n=cfg.ngram_n, L=cfg.L, discard=True),
+            (("hll", HLLSpec(b=cfg.hll_b)),))
+        # Theorem-1 consistency: the plan's post-discard width must be the
+        # hash_bits the HLL's rank extraction assumes, or the two legs of
+        # _update_impl would disagree on the usable-bit budget
+        assert self.plan.hash.out_bits == self.hll.hash_bits, (
+            self.plan.hash.out_bits, self.hll.hash_bits)
         self._update = jax.jit(self._update_impl)
 
     def init_state(self) -> Dict:
@@ -61,9 +73,8 @@ class NgramStats:
             # CMS reuses the same hash graph (XLA CSEs the shared rolling
             # hash on the ref path; on TPU the HLL leg never materialises it)
             h1v = self.fam._lookup(self.fp, tokens)
-            batch_regs = ops.cyclic_hll(h1v, n=self.cfg.ngram_n,
-                                        L=self.cfg.L, b=self.cfg.hll_b,
-                                        impl=self.cfg.impl)
+            batch_regs = api.run(self.plan, h1v,
+                                 impl=self.cfg.impl)["hll"]
             hll_regs = self.hll.merge(state["hll"], batch_regs)
             h = self.fam.pairwise_bits(
                 ops.cyclic(h1v, n=self.cfg.ngram_n, L=self.cfg.L,

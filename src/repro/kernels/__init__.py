@@ -1,17 +1,26 @@
 """Pallas TPU kernels for the paper's compute hot-spots (the rolling hash
 itself) and their data-plane consumers.
 
+- plan.py          declarative SketchPlan: HashSpec (cyclic|general, n, L,
+                   discard, p) + named MinHash/HLL/Bloom sketch specs;
+                   frozen/hashable, i.e. jit static trace keys
+- api.py           the plan engine: api.run(plan, h1v, ...) executes every
+                   requested sketch in ONE rolling-hash device pass; also
+                   the shared validated prologue (flatten, impl dispatch,
+                   S >= n check, n_windows normalization)
 - cyclic.py        rolling CYCLIC hash: direct-window + parallel-prefix modes
 - general.py       rolling GENERAL hash (clmul shift-reduce, trace-time consts)
 - cyclic_fused.py  fused byte->fingerprint (one-hot MXU table lookup + window)
-- sketch_fused.py  fused hash->sketch epilogues (MinHash / HLL / Bloom state
-                   reduced in VMEM scratch inside the grid loop; window
-                   hashes never round-trip HBM)
+- sketch_fused.py  the plan kernel: family-generic tile hashes feeding every
+                   requested sketch epilogue (state reduced in VMEM scratch
+                   inside the grid loop; window hashes never round-trip HBM)
 - bloom.py         Bloom membership probes (standalone decontamination scan)
 - hll.py           HyperLogLog register update (standalone telemetry)
-- ops.py           jit wrappers with CPU fallbacks; ref.py pure-jnp oracles
+- ops.py           jit wrappers for the plain hash kernels + DEPRECATED
+                   cyclic_{minhash,hll,bloom} shims over the plan engine
+- ref.py           pure-jnp oracles, incl. the single-jit plan executor
 
 All kernels use pl.pallas_call with explicit BlockSpec VMEM tiling and are
 validated in interpret mode against ref.py across shape/dtype sweeps
-(tests/test_kernels.py).
+(tests/test_kernels.py, tests/test_sketch_fused.py, tests/test_plan_api.py).
 """

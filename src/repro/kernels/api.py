@@ -1,0 +1,190 @@
+"""The plan engine: one validated entry point for the hash->sketch data-plane.
+
+Callers build a declarative :class:`~repro.kernels.plan.SketchPlan` (hash
+family + named sketches) once and execute it with :func:`run`. The engine
+centralizes everything the legacy per-sketch entry points re-implemented —
+leading-dim flattening, impl validation/dispatch, the Theorem-1 discard
+mask, per-row ``n_windows`` normalization, operand shape checks — and runs
+**all requested sketches in one rolling-hash device pass**:
+
+* ``impl="pallas"`` (or ``"auto"`` on TPU) — one multi-output Pallas kernel
+  (``sketch_fused.sketch_plan_fused``): the tile's window hashes are
+  computed once and folded into every sketch's VMEM scratch accumulator.
+* ``impl="ref"`` (or ``"auto"`` off-TPU) — the matching single-jit jnp
+  graph (``ref.sketch_plan_ref``), one compiled executor per distinct plan.
+
+Both paths are bit-identical to each other and to the legacy single-sketch
+entry points (``ops.cyclic_minhash`` / ``cyclic_hll`` / ``cyclic_bloom``,
+now deprecation shims over this engine).
+
+A plan is also the natural unit for multi-device sharding: ``run`` is pure
+in its array arguments, so a future ``shard_map`` over the batch dimension
+wraps it unchanged (ROADMAP follow-up).
+
+Example::
+
+    from repro.kernels import api
+    from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec,
+                                    MinHashSpec, SketchPlan)
+
+    plan = SketchPlan(
+        hash=HashSpec(family="cyclic", n=8, L=32),        # Theorem-1 discard
+        sketches={"sig": MinHashSpec(k=64),
+                  "card": HLLSpec(b=12),
+                  "decontam": BloomSpec(k=4, log2_m=22)})
+    out = api.run(plan, h1v, h1v_b=h1v_second_draw, n_windows=nw,
+                  operands={"sig": {"a": a, "b": b},
+                            "decontam": {"bits": bloom_bits}})
+    out["sig"], out["card"], out["decontam"]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+from repro.kernels import sketch_fused as _sf
+from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
+
+_IMPLS = ("auto", "pallas", "ref")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_ref(impl: str) -> bool:
+    """Validate ``impl`` and decide the dispatch (jnp graph vs Pallas)."""
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown impl={impl!r}; expected one of {_IMPLS}")
+    return impl == "ref" or (impl == "auto" and not on_tpu())
+
+
+def flatten(x: jnp.ndarray):
+    """(..., S) -> ((B, S), leading-shape) for batch tiling."""
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+def prepare(h1v: jnp.ndarray, *, n: int, impl: str):
+    """The one validated prologue every kernel entry point shares: flatten
+    leading dims, check the window fits, resolve the impl dispatch.
+
+    Returns (x (B, S), lead shape, use_ref flag)."""
+    ref_path = use_ref(impl)        # validates impl before any shape work
+    x, lead = flatten(jnp.asarray(h1v))
+    S = x.shape[-1]
+    if S < n:
+        raise ValueError(f"sequence length {S} < window n={n}")
+    return x, lead, ref_path
+
+
+def norm_windows(n_windows, B: int, W: int) -> jnp.ndarray:
+    """-> (B,) int32 valid-window counts, clamped to the physical W."""
+    if n_windows is None:
+        return jnp.full((B,), W, jnp.int32)
+    nw = jnp.asarray(n_windows, jnp.int32).reshape(-1)
+    if nw.shape != (B,):
+        raise ValueError(f"n_windows shape {nw.shape} != batch ({B},)")
+    return jnp.minimum(nw, np.int32(W))
+
+
+def _check_operands(plan: SketchPlan, operands) -> Dict[str, dict]:
+    """Every sketch gets exactly the operand arrays its spec declares."""
+    operands = dict(operands or {})
+    unknown = set(operands) - set(plan.names)
+    if unknown:
+        raise ValueError(f"operands for sketches not in plan: {sorted(unknown)}")
+    for name, spec in plan.sketches:
+        got = {k: jnp.asarray(v) for k, v in operands.get(name, {}).items()}
+        want = spec.operand_names
+        if set(got) != set(want):
+            raise ValueError(
+                f"sketch {name!r} ({type(spec).__name__}) needs operands "
+                f"{list(want)}, got {sorted(got)}")
+        if isinstance(spec, MinHashSpec):
+            for op in ("a", "b"):
+                if got[op].shape != (spec.k,):
+                    raise ValueError(
+                        f"sketch {name!r}: operand {op!r} shape "
+                        f"{got[op].shape} != (k={spec.k},)")
+        elif isinstance(spec, BloomSpec):
+            if got["bits"].shape != (spec.n_words,):
+                raise ValueError(
+                    f"sketch {name!r}: packed filter shape "
+                    f"{got['bits'].shape} != ({spec.n_words},) for "
+                    f"log2_m={spec.log2_m}")
+        operands[name] = got
+    return operands
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_ref(plan, x, xb, nw, operands):
+    """One jit per distinct plan: the whole multi-sketch graph is a single
+    device dispatch on the CPU path."""
+    return _ref.sketch_plan_ref(plan, x, xb, nw, operands)
+
+
+def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
+        operands=None, impl: str = "auto",
+        **tile_kw) -> Dict[str, jnp.ndarray]:
+    """Execute a :class:`SketchPlan` over (..., S) h1-mapped values.
+
+    Args:
+      plan: hash family + named sketch specs (static; one compiled executor
+        per distinct plan).
+      h1v: (..., S) uint32 h1-mapped token values; leading dims are
+        flattened to a batch and restored on return.
+      h1v_b: second independent family draw, required iff the plan contains
+        a :class:`BloomSpec` (double-hashing probe stride).
+      n_windows: optional (...,) per-row valid-window counts for padded
+        batches; ``None`` means every window of every row is valid.
+      operands: ``{sketch_name: {operand_name: array}}`` runtime inputs —
+        MinHash remix lanes ``a``/``b`` (k,), the packed Bloom filter
+        ``bits`` (2^log2_m/32,).
+      impl: ``"auto"`` (Pallas on TPU, jnp graph elsewhere), ``"pallas"``
+        (force the kernel; interpret-mode off-TPU), ``"ref"`` (force jnp).
+      **tile_kw: ``block_b`` / ``block_s`` overrides for the Pallas path.
+
+    Returns:
+      ``{sketch_name: result}`` — MinHash (..., k) uint32, HLL (2^b,) int32
+      (reduced over the whole batch), Bloom (...,) int32 hit counts.
+    """
+    if not isinstance(plan, SketchPlan):
+        raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
+    x, lead, ref_path = prepare(h1v, n=plan.hash.n, impl=impl)
+    B, S = x.shape
+    operands = _check_operands(plan, operands)
+    xb = None
+    if plan.needs_second_stream:
+        if h1v_b is None:
+            raise ValueError("plan contains a BloomSpec: the double-hashing "
+                             "probe stride needs a second stream h1v_b")
+        xb, _ = flatten(jnp.asarray(h1v_b))
+        if xb.shape != x.shape:
+            raise ValueError(f"h1v_b shape {xb.shape} != h1v shape {x.shape}")
+    elif h1v_b is not None:
+        raise ValueError("h1v_b given but no sketch in the plan consumes a "
+                         "second hash stream")
+    nw = norm_windows(n_windows, B, S - plan.hash.n + 1)
+
+    if ref_path:
+        out = _run_ref(plan, x, xb, nw, operands)
+    else:
+        out = _sf.sketch_plan_fused(x, xb, nw, operands, plan=plan,
+                                    interpret=not on_tpu(), **tile_kw)
+    results = {}
+    for name, spec in plan.sketches:
+        o = out[name]
+        if isinstance(spec, MinHashSpec):
+            results[name] = o.reshape(lead + (spec.k,))
+        elif isinstance(spec, HLLSpec):
+            results[name] = o
+        else:
+            results[name] = o.reshape(lead)
+    return results

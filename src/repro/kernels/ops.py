@@ -1,4 +1,4 @@
-"""Public jit'd wrappers for the rolling-hash and fused hash->sketch kernels.
+"""Public jit'd wrappers for the rolling-hash kernels + deprecated shims.
 
 On TPU the Pallas kernels run natively; on CPU (this container, and any
 host-side data tooling) the same kernels execute under ``interpret=True`` or
@@ -9,154 +9,126 @@ fall back to the pure-jnp reference — selectable via ``impl=``:
 * ``"ref"``     — force the jnp oracle.
 
 All entry points accept (..., S) inputs; leading dims are flattened to a
-batch for tiling and restored on return.
+batch for tiling and restored on return. Validation (impl names, the
+``S >= n`` window check) is centralized in ``api.prepare`` so every entry
+point — plain hash or fused sketch — raises the same errors.
 
-The ``cyclic_minhash`` / ``cyclic_hll`` / ``cyclic_bloom`` entry points are
-the fused data-plane: rolling hash + Theorem-1 discard + sketch epilogue in
-one device pass (kernels/sketch_fused.py on TPU, the equivalent single-jit
-jnp graph elsewhere). ``n_windows`` carries per-row valid-window counts for
-padded batches; ``None`` means every window of every row is valid.
+The fused hash->sketch data-plane lives behind ``repro.kernels.api.run``
+and declarative ``SketchPlan`` objects (see ``kernels/plan.py``): one
+rolling-hash device pass feeds any number of MinHash/HLL/Bloom epilogues,
+for both the CYCLIC and GENERAL families.
+
+DEPRECATED: ``cyclic_minhash`` / ``cyclic_hll`` / ``cyclic_bloom`` predate
+the plan engine. They are kept as thin shims — each builds the equivalent
+one-sketch CYCLIC plan and calls ``api.run`` — with bit-identical outputs.
+New code should build a ``SketchPlan`` (which can also request several
+sketches in one pass, and the GENERAL family).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
+import jax.numpy as jnp
+
+from repro.kernels import api
 from repro.kernels import ref as _ref
-from repro.kernels import sketch_fused as _sf
 from repro.kernels.cyclic import cyclic_rolling
 from repro.kernels.cyclic_fused import cyclic_rolling_fused
 from repro.kernels.general import general_rolling
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _flatten(x):
-    lead = x.shape[:-1]
-    return x.reshape((-1, x.shape[-1])), lead
-
-
-def _use_ref(impl: str) -> bool:
-    if impl not in ("auto", "pallas", "ref"):
-        raise ValueError(f"unknown impl={impl!r}")
-    return impl == "ref" or (impl == "auto" and not _on_tpu())
-
-
-def _hash_mask(n: int, L: int, discard: bool) -> int:
-    """Low-bit mask after the Theorem-1 discard (all L bits if not)."""
-    bits = L - n + 1 if discard else L
-    return (1 << bits) - 1
-
-
-def _norm_windows(n_windows, B: int, W: int) -> jnp.ndarray:
-    """-> (B,) int32 valid-window counts, clamped to the physical W."""
-    if n_windows is None:
-        return jnp.full((B,), W, jnp.int32)
-    nw = jnp.asarray(n_windows, jnp.int32).reshape(-1)
-    assert nw.shape == (B,), (nw.shape, B)
-    return jnp.minimum(nw, np.int32(W))
+from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
 
 
 def cyclic(h1v: jnp.ndarray, *, n: int, L: int = 32, impl: str = "auto",
            mode: str = "auto", **tile_kw) -> jnp.ndarray:
     """Rolling CYCLIC hash of h1-mapped values. (..., S) -> (..., S-n+1)."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return _ref.cyclic_ref(h1v, n, L)
-    x, lead = _flatten(h1v)
-    out = cyclic_rolling(x, n=n, L=L, mode=mode,
-                         interpret=not _on_tpu(), **tile_kw)
+    x, lead, ref_path = api.prepare(h1v, n=n, impl=impl)
+    if ref_path:
+        out = _ref.cyclic_ref(x, n, L)
+    else:
+        out = cyclic_rolling(x, n=n, L=L, mode=mode,
+                             interpret=not api.on_tpu(), **tile_kw)
     return out.reshape(lead + (out.shape[-1],))
 
 
 def general(h1v: jnp.ndarray, *, n: int, p: int, L: int = 32,
             impl: str = "auto", **tile_kw) -> jnp.ndarray:
     """Rolling GENERAL hash mod irreducible p. (..., S) -> (..., S-n+1)."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return _ref.general_ref(h1v, n, p, L)
-    x, lead = _flatten(h1v)
-    out = general_rolling(x, n=n, p=p, L=L, interpret=not _on_tpu(), **tile_kw)
+    x, lead, ref_path = api.prepare(h1v, n=n, impl=impl)
+    if ref_path:
+        out = _ref.general_ref(x, n, p, L)
+    else:
+        out = general_rolling(x, n=n, p=p, L=L, interpret=not api.on_tpu(),
+                              **tile_kw)
     return out.reshape(lead + (out.shape[-1],))
 
 
 def cyclic_fused(tokens: jnp.ndarray, table: jnp.ndarray, *, n: int,
                  L: int = 32, impl: str = "auto", **tile_kw) -> jnp.ndarray:
     """Fused byte->fingerprint: h1 table lookup + rolling CYCLIC hash."""
-    if impl == "ref" or (impl == "auto" and not _on_tpu()):
-        return _ref.cyclic_fused_ref(tokens, table, n, L)
-    x, lead = _flatten(tokens)
-    out = cyclic_rolling_fused(x, table, n=n, L=L,
-                               interpret=not _on_tpu(), **tile_kw)
+    x, lead, ref_path = api.prepare(tokens, n=n, impl=impl)
+    if ref_path:
+        out = _ref.cyclic_fused_ref(x, table, n, L)
+    else:
+        out = cyclic_rolling_fused(x, table, n=n, L=L,
+                                   interpret=not api.on_tpu(), **tile_kw)
     return out.reshape(lead + (out.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATED single-sketch shims (use api.run with a SketchPlan instead)
+# ---------------------------------------------------------------------------
+
+
+def _cyclic_spec(n: int, L: int, discard: bool, shim: str) -> HashSpec:
+    warnings.warn(
+        f"ops.{shim} is deprecated; build a SketchPlan and call "
+        f"repro.kernels.api.run (which can also batch several sketches "
+        f"into one pass, and the GENERAL family)",
+        DeprecationWarning, stacklevel=3)
+    return HashSpec(family="cyclic", n=n, L=L, discard=discard)
 
 
 def cyclic_minhash(h1v: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, *,
                    n: int, L: int = 32, n_windows=None, discard: bool = True,
                    impl: str = "auto", **tile_kw) -> jnp.ndarray:
-    """Fused rolling CYCLIC hash -> MinHash signatures.
+    """DEPRECATED: fused rolling CYCLIC hash -> MinHash signatures.
 
-    h1v (..., S), a/b (k,) -> (..., k) uint32; window hashes never leave the
-    device pass. ``discard`` applies the Theorem-1 low-bit keep inline.
+    Shim over ``api.run`` with a one-sketch plan; bit-identical to the
+    pre-plan entry point. h1v (..., S), a/b (k,) -> (..., k) uint32.
     """
-    x, lead = _flatten(h1v)
-    B, S = x.shape
-    assert S >= n, f"sequence length {S} < window n={n}"
-    hm = _hash_mask(n, L, discard)
-    nw = _norm_windows(n_windows, B, S - n + 1)
-    if _use_ref(impl):
-        out = _ref.minhash_fused_ref(x, nw, a, b, n=n, L=L, hash_mask=hm)
-    else:
-        out = _sf.cyclic_minhash_fused(x, nw, a, b, n=n, L=L, hash_mask=hm,
-                                       interpret=not _on_tpu(), **tile_kw)
-    return out.reshape(lead + (a.shape[0],))
+    plan = SketchPlan(_cyclic_spec(n, L, discard, "cyclic_minhash"),
+                      (("minhash", MinHashSpec(k=int(a.shape[0]))),))
+    return api.run(plan, h1v, n_windows=n_windows,
+                   operands={"minhash": {"a": a, "b": b}}, impl=impl,
+                   **tile_kw)["minhash"]
 
 
 def cyclic_hll(h1v: jnp.ndarray, *, n: int, b: int, L: int = 32,
                rank_bits=None, n_windows=None, discard: bool = True,
                impl: str = "auto", **tile_kw) -> jnp.ndarray:
-    """Fused rolling CYCLIC hash -> HyperLogLog registers (2^b,) int32.
+    """DEPRECATED: fused rolling CYCLIC hash -> HLL registers (2^b,) int32.
 
-    ``rank_bits`` defaults to the usable bits after index extraction:
-    (L-n+1) - b under the Theorem-1 discard, matching
-    HyperLogLog(b, hash_bits=Cyclic.out_bits).update semantics.
+    Shim over ``api.run``; ``rank_bits`` defaults to the usable bits after
+    index extraction ((L-n+1) - b under the Theorem-1 discard).
     """
-    x, lead = _flatten(h1v)
-    B, S = x.shape
-    assert S >= n, f"sequence length {S} < window n={n}"
-    hm = _hash_mask(n, L, discard)
-    if rank_bits is None:
-        rank_bits = (L - n + 1 if discard else L) - b
-    nw = _norm_windows(n_windows, B, S - n + 1)
-    if _use_ref(impl):
-        return _ref.hll_fused_ref(x, nw, n=n, b=b, rank_bits=rank_bits, L=L,
-                                  hash_mask=hm)
-    return _sf.cyclic_hll_fused(x, nw, n=n, b=b, rank_bits=rank_bits, L=L,
-                                hash_mask=hm, interpret=not _on_tpu(),
-                                **tile_kw)
+    plan = SketchPlan(_cyclic_spec(n, L, discard, "cyclic_hll"),
+                      (("hll", HLLSpec(b=b, rank_bits=rank_bits)),))
+    return api.run(plan, h1v, n_windows=n_windows, impl=impl,
+                   **tile_kw)["hll"]
 
 
 def cyclic_bloom(h1va: jnp.ndarray, h1vb: jnp.ndarray, bits: jnp.ndarray, *,
                  n: int, k: int, log2_m: int, L: int = 32, n_windows=None,
                  discard: bool = True, impl: str = "auto",
                  **tile_kw) -> jnp.ndarray:
-    """Fused double rolling CYCLIC hash -> Bloom hit counts (...,) int32.
+    """DEPRECATED: fused double rolling CYCLIC hash -> Bloom hit counts.
 
-    Counts, per row, the valid windows whose k double-hashed probes all hit
-    the packed filter — the decontamination scan reduced on-chip.
+    Shim over ``api.run``; counts, per row, the valid windows whose k
+    double-hashed probes all hit the packed filter.
     """
-    xa, lead = _flatten(h1va)
-    xb, _ = _flatten(h1vb)
-    B, S = xa.shape
-    assert S >= n, f"sequence length {S} < window n={n}"
-    hm = _hash_mask(n, L, discard)
-    nw = _norm_windows(n_windows, B, S - n + 1)
-    if _use_ref(impl):
-        out = _ref.bloom_fused_ref(xa, xb, nw, bits, n=n, k=k,
-                                   log2_m=log2_m, L=L, hash_mask=hm)
-    else:
-        out = _sf.cyclic_bloom_fused(xa, xb, nw, bits, n=n, k=k,
-                                     log2_m=log2_m, L=L, hash_mask=hm,
-                                     interpret=not _on_tpu(), **tile_kw)
-    return out.reshape(lead)
+    plan = SketchPlan(_cyclic_spec(n, L, discard, "cyclic_bloom"),
+                      (("bloom", BloomSpec(k=k, log2_m=log2_m)),))
+    return api.run(plan, h1va, h1v_b=h1vb, n_windows=n_windows,
+                   operands={"bloom": {"bits": bits}}, impl=impl,
+                   **tile_kw)["bloom"]

@@ -1,0 +1,204 @@
+"""Declarative plan objects for the hash->sketch data-plane.
+
+A :class:`SketchPlan` names everything the engine needs to run one rolling-
+hash device pass feeding any number of sketch epilogues:
+
+* :class:`HashSpec` — which recursive family rolls over the stream
+  (``cyclic`` or ``general``), the window ``n``, lane width ``L``, whether
+  the Theorem-1 discard applies, and (for GENERAL) the irreducible modulus
+  ``p``. The spec owns the derived quantities the legacy entry points used
+  to recompute per call: :attr:`HashSpec.out_bits` (usable bits) and
+  :attr:`HashSpec.hash_mask` (the low-bit keep applied inline).
+* Sketch specs — :class:`MinHashSpec`, :class:`HLLSpec`, :class:`BloomSpec`
+  — pure shape/width declarations. Device operands (MinHash remix lanes,
+  the packed Bloom filter) are *runtime* inputs of :func:`repro.kernels.api.run`,
+  keyed by sketch name, so a plan stays a static, hashable trace key.
+
+Plans are frozen dataclasses of ints/strings/tuples: hashable, comparable,
+and safe to use as ``jax.jit`` static arguments — one compiled executor per
+distinct plan, shared by every call site that builds the same plan.
+
+The only ``repro.core`` dependency is host-side parameter resolution
+(``gf2.find_irreducible_host`` for GENERAL's default modulus); all hash
+*math* stays in ``kernels/ref.py`` / the Pallas kernels, which remain
+independently implemented oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple, Union
+
+from repro.core import gf2
+
+FAMILIES = ("cyclic", "general")
+
+
+@dataclasses.dataclass(frozen=True)
+class HashSpec:
+    """One recursive rolling-hash family draw over (..., S) h1-mapped values.
+
+    ``discard=None`` means the family default: CYCLIC applies the Theorem-1
+    (n-1)-bit discard (its raw bits are not uniform, Lemma 3), GENERAL keeps
+    all L bits (pairwise independent as-is, Lemma 1). ``p=0`` auto-resolves
+    the degree-L irreducible modulus for GENERAL and must stay 0 for CYCLIC
+    (whose modulus is fixed at x^L + 1).
+    """
+
+    family: str = "cyclic"
+    n: int = 8
+    L: int = 32
+    discard: Optional[bool] = None
+    p: int = 0
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(
+                f"unknown hash family {self.family!r}; expected one of {FAMILIES}")
+        if not 1 <= self.L <= 32:
+            raise ValueError(f"L must be in [1, 32], got {self.L}")
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        if self.L < self.n:
+            raise ValueError(
+                f"{self.family.upper()} requires L >= n (paper Table 1); "
+                f"got n={self.n}, L={self.L}")
+        if self.family == "cyclic":
+            if self.p:
+                raise ValueError("CYCLIC's modulus is fixed (x^L + 1); p must be 0")
+            if self.discard is None:
+                object.__setattr__(self, "discard", True)
+        else:
+            if self.discard:
+                raise ValueError(
+                    "the Theorem-1 discard applies to CYCLIC only; "
+                    "GENERAL is pairwise independent on all L bits")
+            object.__setattr__(self, "discard", False)
+            p = self.p or gf2.find_irreducible_host(self.L)
+            if p.bit_length() - 1 != self.L:
+                raise ValueError(
+                    f"p must have degree exactly L={self.L}, got {bin(self.p)}")
+            object.__setattr__(self, "p", p)
+
+    @property
+    def out_bits(self) -> int:
+        """Usable (pairwise-independent) bits after the discard, if any."""
+        return self.L - self.n + 1 if self.discard else self.L
+
+    @property
+    def hash_mask(self) -> int:
+        """Low-bit keep mask applied inline to every window hash."""
+        return (1 << self.out_bits) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MinHashSpec:
+    """k-lane MinHash signature; needs runtime operands ``a``/``b`` (k,)."""
+
+    k: int = 64
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"MinHash k must be >= 1, got {self.k}")
+
+    operand_names: Tuple[str, ...] = dataclasses.field(
+        default=("a", "b"), init=False, repr=False, compare=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class HLLSpec:
+    """2^b-register HyperLogLog; ``rank_bits=None`` defaults to the usable
+    bits left after index extraction (``HashSpec.out_bits - b``)."""
+
+    b: int = 12
+    rank_bits: Optional[int] = None
+
+    def __post_init__(self):
+        if self.b < 1:
+            raise ValueError(f"HLL b must be >= 1, got {self.b}")
+
+    operand_names: Tuple[str, ...] = dataclasses.field(
+        default=(), init=False, repr=False, compare=False)
+
+    def resolve_rank_bits(self, hash_spec: HashSpec) -> int:
+        if self.rank_bits is not None:
+            return self.rank_bits
+        rb = hash_spec.out_bits - self.b
+        if rb < 1:
+            raise ValueError(
+                f"HLL b={self.b} leaves no rank bits: the hash provides only "
+                f"{hash_spec.out_bits} usable bits (Theorem-1 discard)")
+        return rb
+
+
+@dataclasses.dataclass(frozen=True)
+class BloomSpec:
+    """k double-hashed probes against a packed 2^log2_m-bit filter; needs the
+    runtime operand ``bits`` (2^log2_m / 32,) and a second hash stream
+    (``h1v_b``) for the probe stride."""
+
+    k: int = 4
+    log2_m: int = 20
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"Bloom k must be >= 1, got {self.k}")
+        if not 5 <= self.log2_m <= 32:
+            raise ValueError(f"Bloom log2_m must be in [5, 32], got {self.log2_m}")
+
+    operand_names: Tuple[str, ...] = dataclasses.field(
+        default=("bits",), init=False, repr=False, compare=False)
+
+    @property
+    def n_words(self) -> int:
+        return 1 << (self.log2_m - 5)
+
+
+SketchSpec = Union[MinHashSpec, HLLSpec, BloomSpec]
+_SPEC_TYPES = (MinHashSpec, HLLSpec, BloomSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchPlan:
+    """A hash family + named sketches, all fed by one rolling-hash pass.
+
+    ``sketches`` accepts a mapping ``{name: spec}`` or a sequence of
+    ``(name, spec)`` pairs; it is normalized to an ordered tuple so the plan
+    stays hashable (jit trace key) and the engine's operand/output layout is
+    deterministic.
+    """
+
+    hash: HashSpec
+    sketches: Tuple[Tuple[str, SketchSpec], ...]
+
+    def __post_init__(self):
+        if not isinstance(self.hash, HashSpec):
+            raise TypeError(f"plan.hash must be a HashSpec, got {type(self.hash)}")
+        items = self.sketches
+        if isinstance(items, Mapping):
+            items = tuple(items.items())
+        else:
+            items = tuple((name, spec) for name, spec in items)
+        if not items:
+            raise ValueError("a SketchPlan needs at least one sketch")
+        names = [name for name, _ in items]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate sketch names in plan: {names}")
+        for name, spec in items:
+            if not isinstance(name, str) or not name:
+                raise ValueError(f"sketch name must be a non-empty str, got {name!r}")
+            if not isinstance(spec, _SPEC_TYPES):
+                raise TypeError(
+                    f"sketch {name!r}: expected one of "
+                    f"{[t.__name__ for t in _SPEC_TYPES]}, got {type(spec)}")
+            if isinstance(spec, HLLSpec):
+                spec.resolve_rank_bits(self.hash)   # raises if inconsistent
+        object.__setattr__(self, "sketches", items)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.sketches)
+
+    @property
+    def needs_second_stream(self) -> bool:
+        """Bloom's double hashing draws a second independent family stream."""
+        return any(isinstance(s, BloomSpec) for _, s in self.sketches)

@@ -76,33 +76,42 @@ def cyclic_fused_ref(tokens: jnp.ndarray, table: jnp.ndarray, n: int, L: int = 3
 
 # ---------------------------------------------------------------------------
 # Fused sketch-epilogue oracles (mirror kernels/sketch_fused.py). These are
-# also the fast-CPU production path behind ops.cyclic_{minhash,hll,bloom} —
-# one fused jit each, no window-hash round trip through host memory.
+# also the fast-CPU production path behind api.run / the deprecated
+# ops.cyclic_{minhash,hll,bloom} shims — one fused jit per plan, no
+# window-hash round trip through host memory. The per-sketch reductions are
+# shared helpers so the single-sketch oracles and the multi-sketch plan
+# executor are the same code (and therefore bit-identical).
 # ---------------------------------------------------------------------------
 
 _SENTINEL = np.uint32(0xFFFFFFFF)
 
 
-def _masked_windows(h1v, n: int, L: int, hash_mask: int, n_windows):
-    """(B, S) -> (B, W) window hashes with the Theorem-1 discard applied and
-    a (B,) bool validity mask (global window index < per-row count)."""
-    h = cyclic_ref(h1v, n, L) & np.uint32(hash_mask)
+def window_hashes_ref(h1v, *, family: str, n: int, L: int,
+                      p: int = 0) -> jnp.ndarray:
+    """Family-generic rolling window hashes: (..., S) -> (..., S-n+1)."""
+    if family == "cyclic":
+        return cyclic_ref(h1v, n, L)
+    if family == "general":
+        return general_ref(h1v, n, p, L)
+    raise ValueError(f"unknown hash family {family!r}")
+
+
+def _masked_windows(h1v, n: int, L: int, hash_mask: int, n_windows,
+                    family: str = "cyclic", p: int = 0):
+    """(B, S) -> (B, W) window hashes with the discard mask applied and a
+    (B, W) bool validity mask (global window index < per-row count)."""
+    h = window_hashes_ref(h1v, family=family, n=n, L=L, p=p)
+    h = h & np.uint32(hash_mask)
     idx = jnp.arange(h.shape[-1], dtype=jnp.int32)
     valid = idx[None, :] < n_windows.astype(jnp.int32)[:, None]
     return h, valid
 
 
-def minhash_fused_ref(h1v, n_windows, a, b, *, n: int, L: int = 32,
-                      hash_mask: int = 0xFFFFFFFF,
-                      k_chunk: int = 16) -> jnp.ndarray:
-    """(B, S) h1v + (B,) n_windows -> (B, k) MinHash signatures.
-
-    Invalid (padded) windows are excluded from the min entirely, so a padded
-    row's signature is bit-identical to signature_batch on the unpadded doc.
-    The remix is evaluated in k-chunks so the full (B, W, k) expansion never
-    materialises on the CPU path.
-    """
-    h, valid = _masked_windows(h1v, n, L, hash_mask, n_windows)
+def minhash_reduce(h, valid, a, b, k_chunk: int = 16) -> jnp.ndarray:
+    """(B, W) masked hashes -> (B, k) signatures; invalid windows excluded
+    from the min entirely (post-remix sentinel substitution). The remix is
+    evaluated in k-chunks so the full (B, W, k) expansion never materialises
+    on the CPU path."""
     outs = []
     k = a.shape[0]
     for s in range(0, k, k_chunk):
@@ -113,10 +122,8 @@ def minhash_fused_ref(h1v, n_windows, a, b, *, n: int, L: int = 32,
     return jnp.concatenate(outs, axis=-1)
 
 
-def hll_fused_ref(h1v, n_windows, *, n: int, b: int, rank_bits: int,
-                  L: int = 32, hash_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
-    """(B, S) h1v -> (2^b,) int32 HLL registers over all valid windows."""
-    h, valid = _masked_windows(h1v, n, L, hash_mask, n_windows)
+def _hll_reduce(h, valid, b: int, rank_bits: int) -> jnp.ndarray:
+    """(B, W) masked hashes -> (2^b,) int32 registers over valid windows."""
     h, valid = h.reshape(-1), valid.reshape(-1)
     m = 1 << b
     idx = (h & np.uint32(m - 1)).astype(jnp.int32)
@@ -128,16 +135,69 @@ def hll_fused_ref(h1v, n_windows, *, n: int, b: int, rank_bits: int,
     return jnp.zeros((m,), jnp.int32).at[idx].max(rank)
 
 
-def bloom_fused_ref(h1va, h1vb, n_windows, bits, *, n: int, k: int,
-                    log2_m: int, L: int = 32,
-                    hash_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
-    """Two h1v draws + packed filter -> (B,) int32 valid-window hit counts."""
-    ha, valid = _masked_windows(h1va, n, L, hash_mask, n_windows)
-    hb = cyclic_ref(h1vb, n, L) & np.uint32(hash_mask)
-    hb = hb | np.uint32(1)
+def _bloom_reduce(ha, hb, valid, bits, k: int, log2_m: int) -> jnp.ndarray:
+    """Two (B, W) masked hash draws + packed filter -> (B,) hit counts."""
+    hb = hb | np.uint32(1)                       # odd probe stride
     i = jnp.arange(k, dtype=_U32)
     probes = (ha[..., None] + i * hb[..., None]) & np.uint32((1 << log2_m) - 1)
     word = (probes >> np.uint32(5)).astype(jnp.int32)
     bit = probes & np.uint32(31)
     hit = jnp.all(((bits[word] >> bit) & np.uint32(1)) == 1, axis=-1)
     return jnp.sum(hit & valid, axis=-1, dtype=jnp.int32)
+
+
+def minhash_fused_ref(h1v, n_windows, a, b, *, n: int, L: int = 32,
+                      hash_mask: int = 0xFFFFFFFF,
+                      k_chunk: int = 16) -> jnp.ndarray:
+    """(B, S) h1v + (B,) n_windows -> (B, k) MinHash signatures."""
+    h, valid = _masked_windows(h1v, n, L, hash_mask, n_windows)
+    return minhash_reduce(h, valid, a, b, k_chunk)
+
+
+def hll_fused_ref(h1v, n_windows, *, n: int, b: int, rank_bits: int,
+                  L: int = 32, hash_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
+    """(B, S) h1v -> (2^b,) int32 HLL registers over all valid windows."""
+    h, valid = _masked_windows(h1v, n, L, hash_mask, n_windows)
+    return _hll_reduce(h, valid, b, rank_bits)
+
+
+def bloom_fused_ref(h1va, h1vb, n_windows, bits, *, n: int, k: int,
+                    log2_m: int, L: int = 32,
+                    hash_mask: int = 0xFFFFFFFF) -> jnp.ndarray:
+    """Two h1v draws + packed filter -> (B,) int32 valid-window hit counts."""
+    ha, valid = _masked_windows(h1va, n, L, hash_mask, n_windows)
+    hb = cyclic_ref(h1vb, n, L) & np.uint32(hash_mask)
+    return _bloom_reduce(ha, hb, valid, bits, k, log2_m)
+
+
+def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands) -> dict:
+    """Single-jnp-graph executor for a SketchPlan: ONE rolling-hash
+    evaluation (per stream) feeds every requested sketch epilogue.
+
+    Mirrors ``sketch_fused.sketch_plan_fused`` bit-for-bit; ``api.run``
+    wraps it in one jit per plan so the whole multi-sketch graph is a
+    single device dispatch on the CPU path.
+    """
+    from repro.kernels.plan import BloomSpec, HLLSpec, MinHashSpec
+
+    hs = plan.hash
+    h, valid = _masked_windows(h1v, hs.n, hs.L, hs.hash_mask, n_windows,
+                               family=hs.family, p=hs.p)
+    hb = None
+    if plan.needs_second_stream:
+        hb = window_hashes_ref(h1v_b, family=hs.family, n=hs.n, L=hs.L,
+                               p=hs.p) & np.uint32(hs.hash_mask)
+    out = {}
+    for name, spec in plan.sketches:
+        ops_nm = operands.get(name, {})
+        if isinstance(spec, MinHashSpec):
+            out[name] = minhash_reduce(h, valid, ops_nm["a"], ops_nm["b"])
+        elif isinstance(spec, HLLSpec):
+            out[name] = _hll_reduce(h, valid, spec.b,
+                                    spec.resolve_rank_bits(hs))
+        elif isinstance(spec, BloomSpec):
+            out[name] = _bloom_reduce(h, hb, valid, ops_nm["bits"],
+                                      spec.k, spec.log2_m)
+        else:  # pragma: no cover - SketchPlan validates spec types
+            raise TypeError(f"unknown sketch spec {type(spec)}")
+    return out

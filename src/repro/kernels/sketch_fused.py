@@ -1,28 +1,36 @@
-"""Pallas TPU kernels: rolling CYCLIC hash with *fused sketch epilogues*.
+"""Pallas TPU kernels: rolling n-gram hash with *fused sketch epilogues*,
+driven by a :class:`repro.kernels.plan.SketchPlan`.
 
 The unfused data-plane computes the full ``(B, S-n+1)`` window-hash array,
 writes it to HBM, and then every sketch re-reads it — MinHash expands it
 k=64x (one affine remix per signature lane), HLL re-reads it for the
 gather/scatter-max register chain, the Bloom scan re-reads it twice (two
-family draws). These kernels instead *reduce the hashes inside the grid
-loop*: the rolling hash of each tile is consumed immediately by the sketch
-epilogue, and only the tiny sketch state (a ``(k,)`` signature row, an
-``(m,)`` register file, a per-row hit count) ever leaves the chip. Window
-hashes never round-trip HBM.
+family draws). :func:`sketch_plan_fused` instead *reduces the hashes inside
+the grid loop*: the rolling hash of each tile is computed **once** and
+consumed immediately by every sketch epilogue the plan requests, and only
+the tiny sketch states (a ``(k,)`` signature row, an ``(m,)`` register
+file, a per-row hit count) ever leave the chip. Window hashes never
+round-trip HBM, even when one pass feeds MinHash + HLL + Bloom together.
 
 Design (the grid-carried scratch-accumulator idiom):
 
 * The grid is ``(B/block_b, S/block_s)`` exactly as in ``cyclic.py``; each
   step loads its tile plus an (n-1)-element halo from the next block —
   expressed as a second BlockSpec view of the same operand.
-* Sketch state lives in a VMEM ``scratch_shapes`` buffer. TPU grids execute
-  sequentially with the last grid dimension innermost, so for each batch
-  block the sequence blocks ``j = 0..gs-1`` arrive in order: the epilogue
-  initialises the scratch at ``j == 0``, folds its tile's contribution with
-  the reduction's own combine (min for MinHash, max for HLL, add for Bloom
-  hit counts), and flushes scratch to the output on the final block. The
-  HLL register file reduces across the *whole* grid (batch blocks too), so
-  it initialises at the very first grid step and flushes at the very last.
+* The tile's window hashes are family-generic: CYCLIC unrolls constant
+  rotations (O(L+n) bit-ops per element), GENERAL unrolls the clmul
+  shift-reduce against trace-time ``x^k mod p(x)`` constants from
+  ``kernels/general.py`` (O(Ln), the paper's bound) — same grid, same
+  epilogues, so plans are family-generic.
+* Each sketch's state lives in its own VMEM ``scratch_shapes`` buffer. TPU
+  grids execute sequentially with the last grid dimension innermost, so for
+  each batch block the sequence blocks ``j = 0..gs-1`` arrive in order: the
+  epilogue initialises the scratch at ``j == 0``, folds its tile's
+  contribution with the reduction's own combine (min for MinHash, max for
+  HLL, add for Bloom hit counts), and flushes scratch to its output on the
+  final block. The HLL register file reduces across the *whole* grid (batch
+  blocks too), so it initialises at the very first grid step and flushes at
+  the very last.
 * Masking of padded windows: callers pass per-row valid-window counts
   (``n_windows``); a window whose global index falls at or beyond that count
   is *excluded from the reduction outright* — MinHash replaces its remixed
@@ -32,14 +40,19 @@ Design (the grid-carried scratch-accumulator idiom):
   row's sketch is therefore bit-identical to the unpadded document's and
   independent of bucket size. Rows padded up to the batch tile get
   ``n_windows = 0`` and are sliced off on return.
-* The Theorem-1 discard (``pairwise_bits``) is fused too: ``hash_mask``
-  keeps the low ``L-n+1`` bits inline, so the full-width hash never exists
-  outside a vector register.
+* The Theorem-1 discard is fused too: ``HashSpec.hash_mask`` keeps the low
+  ``L-n+1`` bits inline (CYCLIC), so the full-width hash never exists
+  outside a vector register. GENERAL keeps all L bits (pairwise independent
+  as-is).
 
 VMEM budgets: the MinHash epilogue materialises a ``(block_b, block_s, k)``
 remix tile and the HLL epilogue a ``(block_b*block_s, m)`` one-hot tile, so
-their default ``block_s`` is smaller than the plain hash kernel's; shrink it
-further for large ``k``/``m`` on real hardware.
+``block_s`` defaults shrink with the sketch mix (and the HLL cap always
+applies); shrink further for large ``k``/``m`` on real hardware.
+
+The legacy single-sketch entry points (``cyclic_minhash_fused`` /
+``cyclic_hll_fused`` / ``cyclic_bloom_fused``) are thin wrappers that build
+a one-sketch plan — one implementation, bit-identical by construction.
 """
 from __future__ import annotations
 
@@ -52,20 +65,34 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.cyclic import _rotl_const
+from repro.kernels.general import _mul_const, _xpows_host
+from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
 
 _U32 = jnp.uint32
 _SENTINEL = np.uint32(0xFFFFFFFF)
 
+# per-sketch default sequence tiles (a multi-sketch plan takes the min)
+_BLOCK_S_DEFAULTS = {MinHashSpec: 512, HLLSpec: 256, BloomSpec: 1024}
 
-def _tile_window_hashes(x, halo_src, *, n: int, L: int, block_s: int):
-    """Rolling CYCLIC hashes of one (block_b, block_s) tile (direct mode)."""
+
+def _tile_window_hashes(x, halo_src, *, hs: HashSpec, block_s: int):
+    """Rolling window hashes of one (block_b, block_s) tile, family-generic:
+    CYCLIC unrolls constant rotations, GENERAL the clmul shift-reduce."""
+    n, L = hs.n, hs.L
     if n > 1:
         cat = jnp.concatenate([x, halo_src[:, : n - 1]], axis=1)
     else:
         cat = x
     acc = jnp.zeros_like(x)
-    for k in range(n):
-        acc = acc ^ _rotl_const(cat[:, k : k + block_s], (n - 1 - k) % L, L)
+    if hs.family == "cyclic":
+        for k in range(n):
+            acc = acc ^ _rotl_const(cat[:, k : k + block_s], (n - 1 - k) % L, L)
+    else:
+        xpow = _xpows_host(n, hs.p, L)
+        for k in range(n):
+            acc = acc ^ _mul_const(cat[:, k : k + block_s], xpow[n - 1 - k],
+                                   hs.p, L)
     return acc
 
 
@@ -76,22 +103,15 @@ def _valid_mask(nw_col, j, shape):
 
 
 # ---------------------------------------------------------------------------
-# MinHash epilogue
+# Per-sketch tile epilogues (shared by every plan containing the sketch)
 # ---------------------------------------------------------------------------
 
 
-def _minhash_kernel(x_ref, nxt_ref, nw_ref, a_ref, b_ref, o_ref, acc_ref, *,
-                    n: int, L: int, block_s: int, hash_mask: int):
-    j = pl.program_id(1)
-
+def _minhash_tile(h, valid, a_ref, b_ref, o_ref, acc_ref, j):
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.full_like(acc_ref, _SENTINEL)
 
-    x = x_ref[...]
-    h = _tile_window_hashes(x, nxt_ref[...], n=n, L=L, block_s=block_s)
-    h = h & np.uint32(hash_mask)
-    valid = _valid_mask(nw_ref[...], j, x.shape)
     # affine remix per signature lane, reduced over this tile's windows;
     # invalid (padded) windows are excluded from the min entirely, so the
     # signature of a padded row is bit-identical to the unpadded one
@@ -105,75 +125,20 @@ def _minhash_kernel(x_ref, nxt_ref, nw_ref, a_ref, b_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("n", "L", "hash_mask", "block_b",
-                                             "block_s", "interpret"))
-def cyclic_minhash_fused(h1v: jnp.ndarray, n_windows: jnp.ndarray,
-                         a: jnp.ndarray, b: jnp.ndarray, *, n: int,
-                         L: int = 32, hash_mask: int = 0xFFFFFFFF,
-                         block_b: int = 8, block_s: int = 512,
-                         interpret: bool = False) -> jnp.ndarray:
-    """h1v (B, S) uint32, n_windows (B,) int32, a/b (k,) -> (B, k) uint32."""
-    assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
-    B, S = h1v.shape
-    k = a.shape[0]
-    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
-    if n - 1 > block_s:
-        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
-    Bp = -(-B // block_b) * block_b
-    Sp = -(-S // block_s) * block_s
-    x = jnp.pad(h1v.astype(_U32), ((0, Bp - B), (0, Sp - S)))
-    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
-    grid = (Bp // block_b, Sp // block_s)
-    nsb = grid[1]
-
-    out = pl.pallas_call(
-        functools.partial(_minhash_kernel, n=n, L=L, block_s=block_s,
-                          hash_mask=hash_mask),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, block_s),
-                         lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1)),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((k,), lambda bi, j: (0,), memory_space=pltpu.VMEM),
-            pl.BlockSpec((k,), lambda bi, j: (0,), memory_space=pltpu.VMEM),
-        ],
-        out_specs=pl.BlockSpec((block_b, k), lambda bi, j: (bi, 0),
-                               memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((Bp, k), _U32),
-        scratch_shapes=[pltpu.VMEM((block_b, k), _U32)],
-        interpret=interpret,
-    )(x, x, nw, a.astype(_U32), b.astype(_U32))
-    return out[:B]
-
-
-# ---------------------------------------------------------------------------
-# HyperLogLog epilogue
-# ---------------------------------------------------------------------------
-
-
-def _hll_kernel(x_ref, nxt_ref, nw_ref, o_ref, acc_ref, *, n: int, L: int,
-                block_s: int, hash_mask: int, b: int, rank_bits: int):
-    bi, j = pl.program_id(0), pl.program_id(1)
-
+def _hll_tile(h, valid, b: int, rank_bits: int, o_ref, acc_ref, bi, j):
     @pl.when((bi == 0) & (j == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]
-    h = _tile_window_hashes(x, nxt_ref[...], n=n, L=L, block_s=block_s)
-    h = (h & np.uint32(hash_mask)).reshape(-1)
-    valid = _valid_mask(nw_ref[...], j, x.shape).reshape(-1)
+    hf = h.reshape(-1)
+    vf = valid.reshape(-1)
     m = 1 << b
-    idx = (h & np.uint32(m - 1)).astype(jnp.int32)
-    rest = h >> np.uint32(b)
+    idx = (hf & np.uint32(m - 1)).astype(jnp.int32)
+    rest = hf >> np.uint32(b)
     isolated = rest & (~rest + np.uint32(1))
     tz = jax.lax.population_count(isolated - np.uint32(1))
     rank = (jnp.minimum(tz, np.uint32(rank_bits)) + 1).astype(jnp.int32)
-    rank = jnp.where(valid, rank, 0)                    # rank 0 never wins
+    rank = jnp.where(vf, rank, 0)                       # rank 0 never wins
     onehot = (idx[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (idx.shape[0], m), 1))
     partial = jnp.where(onehot, rank[:, None], 0).max(axis=0)
@@ -184,82 +149,17 @@ def _hll_kernel(x_ref, nxt_ref, nw_ref, o_ref, acc_ref, *, n: int, L: int,
         o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("n", "L", "hash_mask", "b",
-                                             "rank_bits", "block_b",
-                                             "block_s", "interpret"))
-def cyclic_hll_fused(h1v: jnp.ndarray, n_windows: jnp.ndarray, *, n: int,
-                     b: int, rank_bits: int, L: int = 32,
-                     hash_mask: int = 0xFFFFFFFF, block_b: int = 8,
-                     block_s: int = 256, interpret: bool = False) -> jnp.ndarray:
-    """h1v (B, S) uint32, n_windows (B,) int32 -> (2^b,) int32 registers."""
-    assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
-    B, S = h1v.shape
-    m = 1 << b
-    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
-    # bound the (block_b*block_s, m) one-hot reduction tile to ~4 MB of
-    # VMEM: at the production m=4096 the default tiles would need 32 MB,
-    # which no core has — shrink block_s (the halo still sets a floor)
-    cap = max(32, (4 << 20) // (4 * m * block_b))
-    cap = 1 << int(np.floor(np.log2(cap)))
-    if n > 1 and n - 1 > cap:
-        cap = 1 << int(np.ceil(np.log2(n - 1)))
-    block_s = min(block_s, cap)
-    if n - 1 > block_s:
-        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
-    Bp = -(-B // block_b) * block_b
-    Sp = -(-S // block_s) * block_s
-    x = jnp.pad(h1v.astype(_U32), ((0, Bp - B), (0, Sp - S)))
-    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
-    grid = (Bp // block_b, Sp // block_s)
-    nsb = grid[1]
-
-    return pl.pallas_call(
-        functools.partial(_hll_kernel, n=n, L=L, block_s=block_s,
-                          hash_mask=hash_mask, b=b, rank_bits=rank_bits),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, block_s),
-                         lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1)),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
-                         memory_space=pltpu.VMEM),
-        ],
-        out_specs=pl.BlockSpec((m,), lambda bi, j: (0,),
-                               memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((m,), jnp.int32)],
-        interpret=interpret,
-    )(x, x, nw)
-
-
-# ---------------------------------------------------------------------------
-# Bloom-probe epilogue (decontamination hit counts)
-# ---------------------------------------------------------------------------
-
-
-def _bloom_kernel(xa_ref, nxa_ref, xb_ref, nxb_ref, nw_ref, bits_ref, o_ref,
-                  acc_ref, *, n: int, L: int, block_s: int, hash_mask: int,
-                  k: int, log2_m: int):
-    j = pl.program_id(1)
-
+def _bloom_tile(h, hb, valid, bits_ref, k: int, log2_m: int, o_ref, acc_ref, j):
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xa = xa_ref[...]
-    ha = _tile_window_hashes(xa, nxa_ref[...], n=n, L=L, block_s=block_s)
-    hb = _tile_window_hashes(xb_ref[...], nxb_ref[...], n=n, L=L,
-                             block_s=block_s)
-    ha = ha & np.uint32(hash_mask)
-    hb = (hb & np.uint32(hash_mask)) | np.uint32(1)     # odd probe stride
-    valid = _valid_mask(nw_ref[...], j, xa.shape)
+    hb = hb | np.uint32(1)                              # odd probe stride
     bits = bits_ref[...]
     m_mask = np.uint32((1 << log2_m) - 1)
-    hit = jnp.ones(ha.shape, dtype=jnp.bool_)
+    hit = jnp.ones(h.shape, dtype=jnp.bool_)
     for i in range(k):
-        probe = (ha + np.uint32(i) * hb) & m_mask
+        probe = (h + np.uint32(i) * hb) & m_mask
         word = (probe >> np.uint32(5)).astype(jnp.int32)
         bit = probe & np.uint32(31)
         got = jnp.take(bits, word.reshape(-1), axis=0).reshape(word.shape)
@@ -273,9 +173,212 @@ def _bloom_kernel(xa_ref, nxa_ref, xb_ref, nxb_ref, nw_ref, bits_ref, o_ref,
         o_ref[...] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("n", "L", "hash_mask", "k",
-                                             "log2_m", "block_b", "block_s",
+# ---------------------------------------------------------------------------
+# The plan kernel: one rolling-hash tile, every requested epilogue
+# ---------------------------------------------------------------------------
+
+
+def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
+    hs = plan.hash
+    specs = plan.sketches
+    opcounts = [len(spec.operand_names) for _, spec in specs]
+    needs_b = plan.needs_second_stream
+    n_in = 2 + (2 if needs_b else 0) + 1 + sum(opcounts)
+    ns = len(specs)
+    in_refs = refs[:n_in]
+    out_refs = refs[n_in : n_in + ns]
+    acc_refs = refs[n_in + ns :]
+
+    pos = 2
+    x_ref, xh_ref = in_refs[0], in_refs[1]
+    if needs_b:
+        xb_ref, xbh_ref = in_refs[2], in_refs[3]
+        pos = 4
+    nw_ref = in_refs[pos]
+    pos += 1
+    op_refs = []
+    for c in opcounts:
+        op_refs.append(in_refs[pos : pos + c])
+        pos += c
+
+    bi, j = pl.program_id(0), pl.program_id(1)
+    x = x_ref[...]
+    mask = np.uint32(hs.hash_mask)
+    # ONE rolling-hash evaluation per tile, shared by every epilogue below
+    h = _tile_window_hashes(x, xh_ref[...], hs=hs, block_s=block_s) & mask
+    valid = _valid_mask(nw_ref[...], j, x.shape)
+    hb = None
+    if needs_b:
+        hb = _tile_window_hashes(xb_ref[...], xbh_ref[...], hs=hs,
+                                 block_s=block_s) & mask
+
+    for (name, spec), o_ref, acc_ref, oprs in zip(specs, out_refs, acc_refs,
+                                                  op_refs):
+        if isinstance(spec, MinHashSpec):
+            _minhash_tile(h, valid, oprs[0], oprs[1], o_ref, acc_ref, j)
+        elif isinstance(spec, HLLSpec):
+            _hll_tile(h, valid, spec.b, spec.resolve_rank_bits(hs), o_ref,
+                      acc_ref, bi, j)
+        else:
+            _bloom_tile(h, hb, valid, oprs[0], spec.k, spec.log2_m, o_ref,
+                        acc_ref, j)
+
+
+def _resolve_block_s(plan: SketchPlan, S: int, block_b: int, block_s):
+    """Sequence-tile width honouring every requested sketch's VMEM budget."""
+    if block_s is None:
+        block_s = min(_BLOCK_S_DEFAULTS[type(spec)]
+                      for _, spec in plan.sketches)
+    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    n = plan.hash.n
+    for _, spec in plan.sketches:
+        if isinstance(spec, HLLSpec):
+            # bound the (block_b*block_s, m) one-hot reduction tile to ~4 MB
+            # of VMEM: at the production m=4096 the default tiles would need
+            # 32 MB, which no core has — shrink block_s (the halo still sets
+            # a floor)
+            m = 1 << spec.b
+            cap = max(32, (4 << 20) // (4 * m * block_b))
+            cap = 1 << int(np.floor(np.log2(cap)))
+            if n > 1 and n - 1 > cap:
+                cap = 1 << int(np.ceil(np.log2(n - 1)))
+            block_s = min(block_s, cap)
+    if n - 1 > block_s:
+        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
+    return block_s
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block_b", "block_s",
                                              "interpret"))
+def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
+                      operands, *, plan: SketchPlan, block_b: int = 8,
+                      block_s: int = None, interpret: bool = False) -> dict:
+    """Execute every sketch in ``plan`` in ONE rolling-hash device pass.
+
+    h1v (B, S) uint32, h1v_b (B, S) or None (required iff the plan holds a
+    BloomSpec), n_windows (B,) int32, operands {sketch_name: {operand:
+    array}} -> {sketch_name: result} with MinHash (B, k) uint32, HLL (2^b,)
+    int32 (reduced over the whole batch), Bloom (B,) int32 hit counts.
+    """
+    assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
+    B, S = h1v.shape
+    block_s = _resolve_block_s(plan, S, block_b, block_s)
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    x = jnp.pad(h1v.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
+    grid = (Bp // block_b, Sp // block_s)
+    nsb = grid[1]
+
+    tile = pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
+                        memory_space=pltpu.VMEM)
+    halo = pl.BlockSpec((block_b, block_s),
+                        lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1)),
+                        memory_space=pltpu.VMEM)
+    row = lambda w: pl.BlockSpec((block_b, w), lambda bi, j: (bi, 0),
+                                 memory_space=pltpu.VMEM)
+    flat = lambda w: pl.BlockSpec((w,), lambda bi, j: (0,),
+                                  memory_space=pltpu.VMEM)
+
+    in_specs, inputs = [tile, halo], [x, x]
+    if plan.needs_second_stream:
+        assert h1v_b is not None and h1v_b.shape == h1v.shape, \
+            "plans with a BloomSpec need a second hash stream h1v_b"
+        xb = jnp.pad(h1v_b.astype(_U32), ((0, Bp - B), (0, Sp - S)))
+        in_specs += [tile, halo]
+        inputs += [xb, xb]
+    in_specs.append(row(1))
+    inputs.append(nw)
+
+    out_specs, out_shapes, scratches = [], [], []
+    for name, spec in plan.sketches:
+        ops_nm = operands.get(name, {}) if operands else {}
+        if isinstance(spec, MinHashSpec):
+            in_specs += [flat(spec.k), flat(spec.k)]
+            inputs += [ops_nm["a"].astype(_U32), ops_nm["b"].astype(_U32)]
+            out_specs.append(row(spec.k))
+            out_shapes.append(jax.ShapeDtypeStruct((Bp, spec.k), _U32))
+            scratches.append(pltpu.VMEM((block_b, spec.k), _U32))
+        elif isinstance(spec, HLLSpec):
+            m = 1 << spec.b
+            out_specs.append(flat(m))
+            out_shapes.append(jax.ShapeDtypeStruct((m,), jnp.int32))
+            scratches.append(pltpu.VMEM((m,), jnp.int32))
+        else:
+            # full filter resident per grid step
+            in_specs.append(flat(spec.n_words))
+            inputs.append(ops_nm["bits"].astype(_U32))
+            out_specs.append(row(1))
+            out_shapes.append(jax.ShapeDtypeStruct((Bp, 1), jnp.int32))
+            scratches.append(pltpu.VMEM((block_b, 1), jnp.int32))
+
+    outs = pl.pallas_call(
+        functools.partial(_plan_kernel, plan=plan, block_s=block_s),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
+        scratch_shapes=scratches,
+        interpret=interpret,
+    )(*inputs)
+
+    results = {}
+    for (name, spec), o in zip(plan.sketches, outs):
+        if isinstance(spec, MinHashSpec):
+            results[name] = o[:B]
+        elif isinstance(spec, HLLSpec):
+            results[name] = o
+        else:
+            results[name] = o[:B, 0]
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-sketch entry points — one-sketch plans over the same kernel
+# ---------------------------------------------------------------------------
+
+
+def _legacy_hash_spec(n: int, L: int, hash_mask: int) -> HashSpec:
+    """Map a legacy raw ``hash_mask`` back onto the declarative discard flag.
+
+    Window hashes already fit in L bits, so the legacy default mask
+    0xFFFFFFFF is a no-op AND for any L — same bits as ``discard=False``.
+    """
+    if hash_mask == (1 << (L - n + 1)) - 1:
+        return HashSpec(family="cyclic", n=n, L=L, discard=True)
+    if hash_mask in ((1 << L) - 1, 0xFFFFFFFF):
+        return HashSpec(family="cyclic", n=n, L=L, discard=False)
+    raise ValueError(
+        f"hash_mask {hash_mask:#x} matches neither the Theorem-1 discard "
+        f"mask nor the full width for n={n}, L={L}")
+
+
+def cyclic_minhash_fused(h1v: jnp.ndarray, n_windows: jnp.ndarray,
+                         a: jnp.ndarray, b: jnp.ndarray, *, n: int,
+                         L: int = 32, hash_mask: int = 0xFFFFFFFF,
+                         block_b: int = 8, block_s: int = 512,
+                         interpret: bool = False) -> jnp.ndarray:
+    """h1v (B, S) uint32, n_windows (B,) int32, a/b (k,) -> (B, k) uint32."""
+    plan = SketchPlan(_legacy_hash_spec(n, L, hash_mask),
+                      (("minhash", MinHashSpec(k=int(a.shape[0]))),))
+    return sketch_plan_fused(h1v, None, n_windows,
+                             {"minhash": {"a": a, "b": b}}, plan=plan,
+                             block_b=block_b, block_s=block_s,
+                             interpret=interpret)["minhash"]
+
+
+def cyclic_hll_fused(h1v: jnp.ndarray, n_windows: jnp.ndarray, *, n: int,
+                     b: int, rank_bits: int, L: int = 32,
+                     hash_mask: int = 0xFFFFFFFF, block_b: int = 8,
+                     block_s: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """h1v (B, S) uint32, n_windows (B,) int32 -> (2^b,) int32 registers."""
+    plan = SketchPlan(_legacy_hash_spec(n, L, hash_mask),
+                      (("hll", HLLSpec(b=b, rank_bits=rank_bits)),))
+    return sketch_plan_fused(h1v, None, n_windows, {}, plan=plan,
+                             block_b=block_b, block_s=block_s,
+                             interpret=interpret)["hll"]
+
+
 def cyclic_bloom_fused(h1va: jnp.ndarray, h1vb: jnp.ndarray,
                        n_windows: jnp.ndarray, bits: jnp.ndarray, *, n: int,
                        k: int, log2_m: int, L: int = 32,
@@ -283,42 +386,10 @@ def cyclic_bloom_fused(h1va: jnp.ndarray, h1vb: jnp.ndarray,
                        block_s: int = 1024, interpret: bool = False) -> jnp.ndarray:
     """Two h1v draws (B, S) + packed filter (2^log2_m/32,) -> (B,) int32
     counts of valid windows whose double-hashed probes all hit."""
-    assert h1va.shape == h1vb.shape and h1va.ndim == 2
     assert bits.shape == (1 << (log2_m - 5),)
-    B, S = h1va.shape
-    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
-    if n - 1 > block_s:
-        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
-    Bp = -(-B // block_b) * block_b
-    Sp = -(-S // block_s) * block_s
-    xa = jnp.pad(h1va.astype(_U32), ((0, Bp - B), (0, Sp - S)))
-    xb = jnp.pad(h1vb.astype(_U32), ((0, Bp - B), (0, Sp - S)))
-    nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
-    grid = (Bp // block_b, Sp // block_s)
-    nsb = grid[1]
-    halo = lambda bi, j, _n=nsb: (bi, jnp.minimum(j + 1, _n - 1))
-
-    out = pl.pallas_call(
-        functools.partial(_bloom_kernel, n=n, L=L, block_s=block_s,
-                          hash_mask=hash_mask, k=k, log2_m=log2_m),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, block_s), halo, memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, block_s), halo, memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
-                         memory_space=pltpu.VMEM),
-            # full filter resident per grid step
-            pl.BlockSpec((bits.shape[0],), lambda bi, j: (0,),
-                         memory_space=pltpu.VMEM),
-        ],
-        out_specs=pl.BlockSpec((block_b, 1), lambda bi, j: (bi, 0),
-                               memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((block_b, 1), jnp.int32)],
-        interpret=interpret,
-    )(xa, xa, xb, xb, nw, bits)
-    return out[:B, 0]
+    plan = SketchPlan(_legacy_hash_spec(n, L, hash_mask),
+                      (("bloom", BloomSpec(k=k, log2_m=log2_m)),))
+    return sketch_plan_fused(h1va, h1vb, n_windows,
+                             {"bloom": {"bits": bits}}, plan=plan,
+                             block_b=block_b, block_s=block_s,
+                             interpret=interpret)["bloom"]

@@ -5,8 +5,17 @@
 # XLA_FLAGS=...device_count=8 — expose 8 virtual CPU devices so the
 #   distributed-path tests (sharded train step, mesh resolution) exercise a
 #   real multi-device partitioning instead of silently collapsing to 1.
+#
+# --quick — kernel/plan parity tests only (the hash->sketch data-plane):
+#   fast signal when iterating on kernels/, skipping the model/train/serve
+#   suites.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
+if [[ "${1:-}" == "--quick" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_kernels.py tests/test_sketch_fused.py \
+    tests/test_plan_api.py "$@"
+fi
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,292 @@
+"""SketchPlan engine validation (kernels/plan.py + kernels/api.py).
+
+Acceptance parity, all bit-exact:
+* a multi-sketch plan (MinHash + HLL + Bloom) produces bit-identical
+  results to the three legacy single-sketch entry points and to three
+  single-sketch plans — padded ``n_windows`` batches included, n in
+  {2, 8, 25}, CYCLIC and GENERAL families, ``impl=ref`` and
+  ``impl=pallas`` (interpret mode);
+* the multi-sketch Pallas path really is ONE device pass (exactly one
+  ``pallas_call`` in the jaxpr);
+* GENERAL-fused vs ``general_ref``-based seed formulations;
+* the engine's centralized validation raises consistent errors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BloomFilter, HyperLogLog, MinHash
+from repro.kernels import api, ops, ref
+from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
+from repro.kernels.sketch_fused import sketch_plan_fused
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _h1v(shape, seed=0):
+    return jax.random.bits(jax.random.PRNGKey(seed), shape, dtype=jnp.uint32)
+
+
+def _mh_params(k, seed=1):
+    return MinHash(k=k).init(jax.random.PRNGKey(seed))
+
+
+def _plan(family, n, *, k=32, b=4, bk=3, log2_m=14):
+    return SketchPlan(
+        HashSpec(family=family, n=n, L=32),
+        (("sig", MinHashSpec(k=k)), ("card", HLLSpec(b=b)),
+         ("dec", BloomSpec(k=bk, log2_m=log2_m))))
+
+
+IMPLS = [("ref", {}), ("pallas", dict(block_b=2, block_s=256))]
+
+
+# ---------------------------------------------------------------------------
+# multi-sketch plan == legacy single-sketch entry points (CYCLIC)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 8, 25])
+@pytest.mark.parametrize("impl,tile", IMPLS)
+@pytest.mark.parametrize("padded", [False, True])
+def test_plan_matches_legacy_cyclic(n, impl, tile, padded):
+    B, S = 3, 300
+    x = _h1v((B, S), seed=n)
+    xb = _h1v((B, S), seed=100 + n)
+    p = _mh_params(32)
+    bits = _h1v((1 << 9,), seed=3)
+    nw = None
+    if padded:
+        # same rows embedded in longer buffers, masked via n_windows —
+        # every sketch must be bit-identical to the unpadded batch
+        nw = jnp.asarray(
+            np.random.default_rng(n).integers(1, S - n + 2, size=B),
+            jnp.int32)
+    plan = _plan("cyclic", n)
+    got = api.run(plan, x, h1v_b=xb, n_windows=nw,
+                  operands={"sig": {"a": p["a"], "b": p["b"]},
+                            "dec": {"bits": bits}}, impl=impl, **tile)
+    want_sig = ops.cyclic_minhash(x, p["a"], p["b"], n=n, n_windows=nw,
+                                  impl=impl, **tile)
+    want_hll = ops.cyclic_hll(x, n=n, b=4, n_windows=nw, impl=impl, **tile)
+    want_dec = ops.cyclic_bloom(x, xb, bits, n=n, k=3, log2_m=14,
+                                n_windows=nw, impl=impl, **tile)
+    np.testing.assert_array_equal(np.asarray(got["sig"]),
+                                  np.asarray(want_sig))
+    np.testing.assert_array_equal(np.asarray(got["card"]),
+                                  np.asarray(want_hll))
+    np.testing.assert_array_equal(np.asarray(got["dec"]),
+                                  np.asarray(want_dec))
+    if padded:
+        # and identical to signing the truncated rows unpadded, one by one
+        for i in range(B):
+            row = x[i : i + 1, : int(nw[i]) + n - 1]
+            np.testing.assert_array_equal(
+                np.asarray(got["sig"][i]),
+                np.asarray(ops.cyclic_minhash(row, p["a"], p["b"], n=n,
+                                              impl=impl, **tile)[0]))
+
+
+@pytest.mark.parametrize("impl,tile", IMPLS)
+@pytest.mark.parametrize("family", ["cyclic", "general"])
+def test_multi_plan_matches_three_single_plans(family, impl, tile):
+    x = _h1v((4, 500), seed=9)
+    xb = _h1v((4, 500), seed=10)
+    p = _mh_params(32)
+    bits = _h1v((1 << 9,), seed=11)
+    multi = _plan(family, 8)
+    got = api.run(multi, x, h1v_b=xb,
+                  operands={"sig": {"a": p["a"], "b": p["b"]},
+                            "dec": {"bits": bits}}, impl=impl, **tile)
+    singles = {}
+    hs = multi.hash
+    singles["sig"] = api.run(
+        SketchPlan(hs, (("sig", MinHashSpec(k=32)),)), x,
+        operands={"sig": {"a": p["a"], "b": p["b"]}}, impl=impl,
+        **tile)["sig"]
+    singles["card"] = api.run(
+        SketchPlan(hs, (("card", HLLSpec(b=4)),)), x, impl=impl,
+        **tile)["card"]
+    singles["dec"] = api.run(
+        SketchPlan(hs, (("dec", BloomSpec(k=3, log2_m=14)),)), x, h1v_b=xb,
+        operands={"dec": {"bits": bits}}, impl=impl, **tile)["dec"]
+    for name in ("sig", "card", "dec"):
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(singles[name]))
+
+
+# ---------------------------------------------------------------------------
+# GENERAL-fused vs the seed (general_ref + core sketch) formulations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl,tile", IMPLS)
+@pytest.mark.parametrize("n", [2, 8, 25])
+def test_general_fused_matches_general_ref(n, impl, tile):
+    B, S = 3, 400
+    x = _h1v((B, S), seed=20 + n)
+    xb = _h1v((B, S), seed=40 + n)
+    p = _mh_params(32)
+    bits = _h1v((1 << 9,), seed=5)
+    plan = _plan("general", n)
+    assert plan.hash.out_bits == 32          # no Theorem-1 discard
+    got = api.run(plan, x, h1v_b=xb,
+                  operands={"sig": {"a": p["a"], "b": p["b"]},
+                            "dec": {"bits": bits}}, impl=impl, **tile)
+    # seed-style oracles built directly on general_ref window hashes
+    h = ref.general_ref(x, n, plan.hash.p, 32)
+    mixed = (p["a"][None, :, None].astype(jnp.uint32) * h[:, None, :]
+             + p["b"][None, :, None])
+    np.testing.assert_array_equal(np.asarray(got["sig"]),
+                                  np.asarray(jnp.min(mixed, axis=-1)))
+    hll = HyperLogLog(b=4, hash_bits=32)
+    np.testing.assert_array_equal(
+        np.asarray(got["card"]),
+        np.asarray(hll.update(hll.init(), h.reshape(-1))))
+    hb = ref.general_ref(xb, n, plan.hash.p, 32)
+    bf = BloomFilter(log2_m=14, k=3)
+    want = bf.contains(bits, h, hb).sum(axis=-1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got["dec"]), np.asarray(want))
+
+
+def test_general_ref_equals_pallas_padded():
+    x = _h1v((5, 700), seed=7)
+    nw = jnp.asarray([1, 100, 400, 693, 0], jnp.int32)
+    p = _mh_params(16)
+    plan = SketchPlan(HashSpec(family="general", n=8),
+                      (("sig", MinHashSpec(k=16)),))
+    a = api.run(plan, x, n_windows=nw,
+                operands={"sig": {"a": p["a"], "b": p["b"]}}, impl="ref")
+    b = api.run(plan, x, n_windows=nw,
+                operands={"sig": {"a": p["a"], "b": p["b"]}}, impl="pallas",
+                block_b=2, block_s=256)
+    np.testing.assert_array_equal(np.asarray(a["sig"]), np.asarray(b["sig"]))
+
+
+# ---------------------------------------------------------------------------
+# one device pass: exactly one pallas_call in the fused jaxpr
+# ---------------------------------------------------------------------------
+
+
+def _count_primitive(jaxpr, name):
+    cnt = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            cnt += 1
+        for v in eqn.params.values():
+            for u in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(u, "jaxpr"):
+                    cnt += _count_primitive(u.jaxpr, name)
+                elif hasattr(u, "eqns"):
+                    cnt += _count_primitive(u, name)
+    return cnt
+
+
+@pytest.mark.parametrize("family", ["cyclic", "general"])
+def test_multi_sketch_is_one_pallas_call(family):
+    plan = _plan(family, 8)
+    p = _mh_params(32)
+    bits = _h1v((1 << 9,), seed=3)
+
+    def fn(x, xb, nw, a, b, bits):
+        return sketch_plan_fused(x, xb, nw,
+                                 {"sig": {"a": a, "b": b},
+                                  "dec": {"bits": bits}},
+                                 plan=plan, block_b=2, block_s=256,
+                                 interpret=True)
+
+    jaxpr = jax.make_jaxpr(fn)(_h1v((3, 300)), _h1v((3, 300), 1),
+                               jnp.full((3,), 293, jnp.int32),
+                               p["a"], p["b"], bits)
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+
+# ---------------------------------------------------------------------------
+# centralized validation: consistent errors from every entry point
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="unknown hash family"):
+        HashSpec(family="id37")
+    with pytest.raises(ValueError, match="L >= n"):
+        HashSpec(family="cyclic", n=33, L=32)
+    with pytest.raises(ValueError, match="discard applies to CYCLIC"):
+        HashSpec(family="general", discard=True)
+    with pytest.raises(ValueError, match="p must be 0"):
+        HashSpec(family="cyclic", p=0x11B)
+    with pytest.raises(ValueError, match="degree exactly L"):
+        HashSpec(family="general", L=32, p=0x11B)
+    with pytest.raises(ValueError, match="at least one sketch"):
+        SketchPlan(HashSpec(), ())
+    with pytest.raises(ValueError, match="duplicate sketch names"):
+        SketchPlan(HashSpec(), (("a", MinHashSpec()), ("a", HLLSpec())))
+    with pytest.raises(ValueError, match="no rank bits"):
+        # n=25 discard leaves 8 usable bits; b=12 over-consumes them
+        SketchPlan(HashSpec(n=25), (("h", HLLSpec(b=12)),))
+
+
+def test_run_validation_errors():
+    x = _h1v((2, 64))
+    p = _mh_params(8)
+    plan = SketchPlan(HashSpec(n=8), (("sig", MinHashSpec(k=8)),))
+    with pytest.raises(ValueError, match="unknown impl"):
+        api.run(plan, x, operands={"sig": dict(p)}, impl="tpu")
+    with pytest.raises(ValueError, match="sequence length 4 < window n=8"):
+        api.run(plan, _h1v((2, 4)), operands={"sig": dict(p)})
+    with pytest.raises(ValueError, match="needs operands"):
+        api.run(plan, x)
+    with pytest.raises(ValueError, match="not in plan"):
+        api.run(plan, x, operands={"sig": dict(p), "ghost": {}})
+    with pytest.raises(ValueError, match=r"shape \(4,\) != \(k=8,\)"):
+        api.run(plan, x, operands={"sig": {"a": p["a"][:4], "b": p["b"][:4]}})
+    bplan = SketchPlan(HashSpec(n=8), (("dec", BloomSpec(k=2, log2_m=14)),))
+    with pytest.raises(ValueError, match="second stream"):
+        api.run(bplan, x, operands={"dec": {"bits": _h1v((1 << 9,))}})
+    with pytest.raises(ValueError, match="no sketch in the plan consumes"):
+        api.run(plan, x, h1v_b=x, operands={"sig": dict(p)})
+    with pytest.raises(ValueError, match="packed filter shape"):
+        api.run(bplan, x, h1v_b=x, operands={"dec": {"bits": _h1v((7,))}})
+
+
+def test_plain_hash_entry_points_validate_too():
+    # the satellite: cyclic/general/cyclic_fused share the same validated
+    # prologue as the fused paths (same messages, S >= n enforced)
+    x = _h1v((2, 4))
+    with pytest.raises(ValueError, match="sequence length 4 < window n=8"):
+        ops.cyclic(x, n=8)
+    with pytest.raises(ValueError, match="sequence length 4 < window n=8"):
+        ops.general(x, n=8, p=HashSpec(family="general").p)
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.cyclic(x, n=2, impl="cuda")
+    tbl = _h1v((256,))
+    with pytest.raises(ValueError, match="sequence length 4 < window n=8"):
+        ops.cyclic_fused(x, tbl, n=8)
+
+
+# ---------------------------------------------------------------------------
+# plan-built services: GENERAL family through the dedup data-plane
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_general_family_rides_fused_plan():
+    from repro.data.dedup import DedupConfig, MinHashDeduper
+    dd = MinHashDeduper(DedupConfig(vocab=4096, family="general"))
+    assert dd.plan is not None and dd.plan.hash.family == "general"
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 4096, size=int(s)).astype(np.int32)
+            for s in rng.integers(40, 200, size=12)]
+    sigs = dd.signature_many(docs)
+    for i in (0, 5, 11):
+        np.testing.assert_array_equal(sigs[i], dd.signature_unfused(docs[i]))
+
+
+def test_service_plans_are_discard_consistent():
+    from repro.data.decontam import DecontamConfig, Decontaminator
+    from repro.data.stats import NgramStats, StatsConfig
+    st = NgramStats(StatsConfig(ngram_n=8))
+    assert st.plan.hash.out_bits == st.hll.hash_bits == 25
+    de = Decontaminator(DecontamConfig(ngram_n=8, log2_m=14))
+    assert de.plan.hash.out_bits == de.fam_a.out_bits == 25
