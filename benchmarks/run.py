@@ -7,6 +7,11 @@ root; override the path with REPRO_BENCH_JSON).
 
 Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
 CI/pytest smoke uses a smaller value for time).
+
+The shard_scaling section needs multiple devices: if jax has not been
+imported yet and the operator did not pin a device count, 8 virtual CPU
+devices are exposed (the same flag test.sh exports) so the 1/2/4/8 sweep is
+real under a bare ``python benchmarks/run.py``.
 """
 from __future__ import annotations
 
@@ -16,12 +21,24 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (fig1_speed, pipeline_bench, sketch_fusion,
-                            table1_properties)
+    # must precede the section imports below (they import jax); kept inside
+    # main() so merely importing this module has no environment side effect
+    if "jax" not in sys.modules:
+        _flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in _flags:
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=8 " + _flags).strip()
+    from benchmarks import (fig1_speed, pipeline_bench, shard_scaling,
+                            sketch_fusion, table1_properties)
     n_chars = int(os.environ.get("REPRO_BENCH_CHARS", 4_300_000))
     rows = []
     print("name,us_per_call,derived")
-    for mod, kw in ((fig1_speed, {"n_chars": n_chars}),
+    # shard_scaling runs FIRST: the 1/2/4/8 device sweep compares points
+    # against each other, so it needs the runtime (thread pools, allocator)
+    # in the same state for every point — not whatever the previous
+    # sections left behind
+    for mod, kw in ((shard_scaling, {"scale": n_chars / 4_300_000}),
+                    (fig1_speed, {"n_chars": n_chars}),
                     (table1_properties, {}),
                     (pipeline_bench, {}),
                     (sketch_fusion, {})):
@@ -47,7 +64,7 @@ def main() -> None:
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr2.json"))
+                     "BENCH_pr3.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

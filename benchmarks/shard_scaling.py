@@ -1,0 +1,162 @@
+"""Multi-device scaling of the sharded sketch data-plane (PR 3).
+
+Three measurements, all parity-asserted before timing so a speedup is never
+measured against a semantically different computation:
+
+* **sharded signing sweep** — one MinHash plan over a (B, S) batch through
+  ``shard.run_sharded`` at 1/2/4/8 data shards (the 8 virtual CPU devices
+  ``test.sh``/``benchmarks/run.py`` expose; on real hardware the same knob
+  sweeps TPU cores). Outputs are bit-identical at every device count.
+* **batched dedup** — ``MinHashDeduper.add_batch`` with the ``data_shards``
+  knob on vs off (sharded signing + band-sharded LSH probing vs the
+  single-device path), identical flags asserted.
+* **lane-tiled MinHash remix** — the fused kernel's k=64 signature pass at
+  the block_s the lane-tiled budget admits vs the widest tile the old
+  full-k ``(block_b, block_s, k)`` budget allowed (interpret mode off-TPU;
+  the admitted-tile numbers are the architectural point). k<=16 plans run a
+  single lane chunk — the exact pre-lane-tiling computation — so there is
+  no regression to measure, only to assert.
+
+Virtual CPU devices share the host's physical cores, so CPU wall-clock
+scaling is bounded by core count (this container has few); the sweep still
+proves the partitioning is real (per-shard work drops with d) and records
+the trajectory for real-TPU runs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.kernels import api, shard
+from repro.kernels.plan import HashSpec, MinHashSpec, SketchPlan
+from repro.kernels.sketch_fused import (_MINHASH_LANE_TILE, _budget_cap,
+                                        _resolve_block_s, sketch_plan_fused)
+
+
+def _timeit(fn, reps=5):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _sign_sweep(B: int, S: int):
+    plan = SketchPlan(HashSpec(family="cyclic", n=8, L=32),
+                      (("sig", MinHashSpec(k=64)),))
+    key = jax.random.PRNGKey(0)
+    kx, ka, kb = jax.random.split(key, 3)
+    h1v = jax.random.bits(kx, (B, S), dtype=jnp.uint32)
+    a = jax.random.bits(ka, (64,), dtype=jnp.uint32) | np.uint32(1)
+    b = jax.random.bits(kb, (64,), dtype=jnp.uint32)
+    operands = {"sig": {"a": a, "b": b}}
+    want = np.asarray(api.run(plan, h1v, operands=operands)["sig"])
+
+    rows, t1 = [], None
+    for d in (1, 2, 4, 8):
+        if d > len(jax.devices()):
+            continue
+        run = lambda d=d: shard.run_sharded(plan, h1v, operands=operands,
+                                            data_shards=d)["sig"]
+        np.testing.assert_array_equal(np.asarray(run()), want)  # bit-exact
+        t = _timeit(lambda: jax.block_until_ready(run()))
+        t1 = t1 or t
+        rows.append({"name": f"shard_sign_d{d}_{B}x{S}",
+                     "us_per_call": t * 1e6,
+                     "derived": f"{B / t:.1f} docs/s; {t1 / t:.2f}x vs d=1"})
+    return rows
+
+
+def _timed_add_batch(cfg, docs):
+    """Steady-state add_batch time: the deduper's per-instance jit is warmed
+    via signature_many (same trace keys, no index mutation) so the timed
+    region is signing + probing + verify, not trace/compile."""
+    dd = MinHashDeduper(cfg)
+    dd.signature_many(docs)
+    t0 = time.perf_counter()
+    flags = dd.add_batch(docs)
+    dt = time.perf_counter() - t0
+    dd.close()
+    return dt, flags
+
+
+def _dedup_rows(n_docs: int = 192, doc_len: int = 1024):
+    rng = np.random.default_rng(0)
+    lens = rng.integers(doc_len // 2 + 1, doc_len + 1, size=n_docs)
+    docs = [rng.integers(0, 65536, size=int(n)).astype(np.int32)
+            for n in lens]
+    dmax = min(8, len(jax.devices()))
+    cfg1 = DedupConfig(vocab=65536)
+    cfgd = DedupConfig(vocab=65536, data_shards=dmax, lsh_workers=4)
+    t1, f1 = _timed_add_batch(cfg1, docs)
+    td, fd = _timed_add_batch(cfgd, docs)
+    np.testing.assert_array_equal(f1, fd)                       # same flags
+    return [
+        {"name": f"shard_dedup_batch_d1_{n_docs}docs",
+         "us_per_call": t1 * 1e6, "derived": f"{n_docs / t1:.1f} docs/s"},
+        {"name": f"shard_dedup_batch_d{dmax}_{n_docs}docs",
+         "us_per_call": td * 1e6,
+         "derived": f"{n_docs / td:.1f} docs/s; {t1 / td:.2f}x vs d=1 "
+                    f"(sharded signing + band-sharded LSH probe)"},
+    ]
+
+
+def _remix_rows(B: int = 8, S: int = 2048):
+    """The k=64 cap lift: admitted block_s under the lane-tiled budget vs
+    the old full-k budget, plus interpret-mode timings at both widths."""
+    block_b, n = 8, 8
+    plan64 = SketchPlan(HashSpec(family="cyclic", n=n, L=32),
+                        (("sig", MinHashSpec(k=64)),))
+    admitted = _resolve_block_s(plan64, 1 << 20, block_b, 4096)
+    old_cap = _budget_cap(64, block_b, n)        # full-(bb,bs,k) tile budget
+    assert admitted > old_cap, (admitted, old_cap)
+
+    key = jax.random.PRNGKey(1)
+    kx, ka, kb = jax.random.split(key, 3)
+    h1v = jax.random.bits(kx, (B, S), dtype=jnp.uint32)
+    nw = jnp.full((B,), S - n + 1, jnp.int32)
+    rows = []
+    for k, bs, note in (
+            (64, min(admitted, S),
+             f"block_s={admitted} admitted (full-k budget capped at "
+             f"{old_cap}); lane_tile={_MINHASH_LANE_TILE}"),
+            (16, min(admitted, S),
+             "single lane chunk == pre-lane-tiling kernel (no regression)")):
+        a = jax.random.bits(ka, (k,), dtype=jnp.uint32) | np.uint32(1)
+        b = jax.random.bits(kb, (k,), dtype=jnp.uint32)
+        plan = SketchPlan(HashSpec(family="cyclic", n=n, L=32),
+                          (("sig", MinHashSpec(k=k)),))
+        run = lambda plan=plan, a=a, b=b, bs=bs: sketch_plan_fused(
+            h1v, None, nw, {"sig": {"a": a, "b": b}}, plan=plan,
+            block_b=block_b, block_s=bs, interpret=True)["sig"]
+        want = api.run(plan, h1v, n_windows=nw,
+                       operands={"sig": {"a": a, "b": b}}, impl="ref")["sig"]
+        np.testing.assert_array_equal(np.asarray(run()), np.asarray(want))
+        t = _timeit(lambda: jax.block_until_ready(run()), reps=2)
+        wins = B * (S - n + 1)
+        rows.append({"name": f"minhash_remix_lane_tiled_k{k}_bs{bs}",
+                     "us_per_call": t * 1e6,
+                     "derived": f"{wins / t / 1e6:.2f} Mwin/s interp; {note}"})
+    return rows
+
+
+def run(n_docs: int = 192, sign_B: int = 256, sign_S: int = 2048,
+        scale: float = 1.0):
+    """``scale`` (run.py passes REPRO_BENCH_CHARS / 4.3M) shrinks the
+    workloads for smoke runs; floors keep every measurement meaningful."""
+    scale = min(1.0, max(scale, 0.0))
+    n_docs = max(16, int(n_docs * scale))
+    sign_B = max(16, int(sign_B * scale))
+    return (_sign_sweep(sign_B, sign_S) + _dedup_rows(n_docs)
+            + _remix_rows())
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -16,14 +16,14 @@ leaves the chip. The one-time eval-set *add* keeps the jnp scatter-OR path
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BloomFilter, make_family
-from repro.kernels import api
+from repro.kernels import shard
 from repro.kernels.plan import BloomSpec, HashSpec, SketchPlan
 
 
@@ -37,11 +37,16 @@ class DecontamConfig:
     max_hit_frac: float = 0.5    # flag a sequence when >50% of windows hit
     seed: int = 7
     impl: str = "auto"           # kernel dispatch: auto | pallas | ref
+    # shard the per-batch scan over this many devices (None = single device):
+    # rows are row-parallel, the filter is replicated, counts come back
+    # bit-identical at any device count
+    data_shards: Optional[int] = None
 
 
 class Decontaminator:
-    def __init__(self, cfg: DecontamConfig):
+    def __init__(self, cfg: DecontamConfig, mesh=None):
         self.cfg = cfg
+        self.mesh = mesh
         key = jax.random.PRNGKey(cfg.seed)
         ka, kb = jax.random.split(key)
         self.fam_a = make_family("cyclic", n=cfg.ngram_n, L=cfg.L)
@@ -78,11 +83,12 @@ class Decontaminator:
 
     def _scan_impl(self, bits, tokens):
         # fused: double rolling hash + probes + per-row count, on-chip
-        counts = api.run(
+        counts = shard.run_auto(
             self.plan, self.fam_a._lookup(self.pa, tokens),
             h1v_b=self.fam_b._lookup(self.pb, tokens),
             operands={"bloom": {"bits": bits}},
-            impl=self.cfg.impl)["bloom"]
+            impl=self.cfg.impl, mesh=self.mesh,
+            data_shards=self.cfg.data_shards)["bloom"]
         W = tokens.shape[-1] - self.cfg.ngram_n + 1
         return counts.astype(jnp.float32) / np.float32(W)
 

@@ -16,6 +16,17 @@ k=64x MinHash expansion never round-trip HBM. Padded windows are excluded
 from the min outright, making a padded row's signature bit-identical to the
 unpadded document's — signatures are independent of bucket size.
 
+Scaling out (two independent axes):
+* **signing** — a ``mesh``/``data_shards`` knob routes the bucket batches
+  through :func:`repro.kernels.shard.run_sharded`: the same plan executes
+  under ``shard_map`` over the batch dimension of a 1-D data mesh
+  (signature rows are row-parallel; bit-identical at any device count).
+* **the LSH index** — :class:`BandShardedLSHIndex` partitions the band->key
+  map by band id. Every band's shard is probed/inserted independently, so
+  probes fan out across bands (optionally on a thread pool via
+  ``lsh_workers``, or across hosts in a service deployment) while the
+  sequential candidate-verify loop keeps streaming first-wins order exact.
+
 Operating modes:
 * :meth:`MinHashDeduper.add_batch`  — batched corpus dedup: one signing pass
   per bucket, then a vectorized NumPy group-by over LSH band keys generates
@@ -31,6 +42,7 @@ Operating modes:
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Cyclic, General, MinHash, make_family
-from repro.kernels import api
+from repro.kernels import api, shard
 from repro.kernels import ref as kref
 from repro.kernels.plan import HashSpec, MinHashSpec, SketchPlan
 
@@ -71,6 +83,13 @@ class DedupConfig:
     vocab: int = 1 << 17
     seed: int = 0
     impl: str = "auto"           # kernel dispatch: auto | pallas | ref
+    # multi-device signing: shard the bucket batches over the first
+    # data_shards devices (None = single-device api.run; a Deduper can also
+    # be handed an explicit mesh at construction)
+    data_shards: Optional[int] = None
+    # probe the band-sharded LSH index on a thread pool of this many workers
+    # (0/1 = in-line; band shards are independent either way)
+    lsh_workers: int = 0
 
 
 def _bucket(n: int) -> int:
@@ -78,10 +97,103 @@ def _bucket(n: int) -> int:
     return max(64, 1 << int(np.ceil(np.log2(max(n, 2)))))
 
 
-class MinHashDeduper:
-    """Near-dedup with an LSH band index; batched signing, vectorized probing."""
+class BandShardedLSHIndex:
+    """The LSH band->key map, partitioned by band id.
 
-    def __init__(self, cfg: DedupConfig):
+    Each band owns an independent ``{band_key: [doc_id, ...]}`` shard, so a
+    probe (or insert) decomposes into ``n_bands`` disjoint lookups that can
+    run concurrently — on a thread pool here, or one shard per host in a
+    service deployment (shard b of a multi-host index lives on host
+    ``b % n_hosts``; probes are scatter/gather RPCs). Correctness does not
+    depend on the schedule: shard results are combined into per-document
+    candidate *sets* before any Jaccard verification, and the verify loop
+    itself stays sequential in document order, so streaming first-wins
+    semantics are reproduced exactly.
+    """
+
+    def __init__(self, n_bands: int, workers: int = 0):
+        self.n_bands = n_bands
+        self.workers = workers
+        # one pool for the index's lifetime, created lazily on the first
+        # batched probe — per-probe pool setup/teardown would eat the
+        # cross-band parallelism on small batches; close() releases it
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self.shards: List[Dict[bytes, List[int]]] = [
+            {} for _ in range(n_bands)]
+
+    def close(self) -> None:
+        """Release the probe thread pool (the index stays usable; a later
+        pooled probe recreates it)."""
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def insert(self, doc_id: int, keys: Sequence[bytes]) -> None:
+        """Register a kept document under its band keys (one per shard)."""
+        for shard_b, kb in zip(self.shards, keys):
+            shard_b.setdefault(kb, []).append(doc_id)
+
+    def probe(self, keys: Sequence[bytes]) -> set:
+        """Union of the doc ids colliding with ``keys`` in any band."""
+        out: set = set()
+        for shard_b, kb in zip(self.shards, keys):
+            out.update(shard_b.get(kb, ()))
+        return out
+
+    def _probe_shard(self, b: int, col: np.ndarray):
+        """One band shard's group-by: (D,) void keys -> [(members, hits)].
+
+        ``members`` are batch positions sharing a band key (ascending, so
+        earlier-in-batch candidates are recoverable) and ``hits`` the index
+        doc ids already stored under that key. Pure function of one shard —
+        the unit of cross-band parallelism.
+        """
+        shard_b = self.shards[b]
+        uniq, inv = np.unique(col, return_inverse=True)
+        hits = [shard_b.get(u.tobytes()) for u in uniq]
+        order = np.argsort(inv, kind="stable")       # groups, ids ascending
+        sorted_inv = inv[order]
+        starts = np.flatnonzero(
+            np.r_[True, sorted_inv[1:] != sorted_inv[:-1]])
+        ends = np.r_[starts[1:], len(order)]
+        return [(order[s:e], hits[sorted_inv[s]])
+                for s, e in zip(starts, ends)]
+
+    def probe_batch(self, kb: np.ndarray) -> Tuple[List[set], List[set]]:
+        """(D, n_bands) void band keys -> per-doc candidate sets.
+
+        Returns ``(index_cand, batch_cand)``: doc ids already in the index
+        whose band keys collide with doc i, and *earlier batch positions*
+        colliding with doc i (their verdicts are not known yet — the verify
+        loop resolves them to kept doc ids in order).
+        """
+        D = kb.shape[0]
+        cols = [np.ascontiguousarray(kb[:, b]) for b in range(self.n_bands)]
+        if self.workers > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(self.workers)
+            per_band = list(self._pool.map(self._probe_shard,
+                                           range(self.n_bands), cols))
+        else:
+            per_band = [self._probe_shard(b, col)
+                        for b, col in enumerate(cols)]
+        index_cand: List[set] = [set() for _ in range(D)]
+        batch_cand: List[set] = [set() for _ in range(D)]
+        for groups in per_band:
+            for members, hit in groups:
+                for pos, i in enumerate(members):
+                    if hit:
+                        index_cand[i].update(hit)
+                    if pos:                          # earlier batch docs
+                        batch_cand[i].update(members[:pos].tolist())
+        return index_cand, batch_cand
+
+
+class MinHashDeduper:
+    """Near-dedup with a band-sharded LSH index; batched (optionally
+    multi-device) signing, vectorized cross-band probing."""
+
+    def __init__(self, cfg: DedupConfig, mesh=None):
         self.cfg = cfg
         assert cfg.n_signatures % cfg.lsh_bands == 0
         self.rows = cfg.n_signatures // cfg.lsh_bands
@@ -94,11 +206,24 @@ class MinHashDeduper:
         # the fused hash->sketch plan, built ONCE (it is the jit trace key);
         # None for families the fused engine does not cover
         self.plan = _plan_for_family(self.fam, cfg.n_signatures)
-        self._bands: List[Dict[bytes, List[int]]] = [
-            {} for _ in range(cfg.lsh_bands)]
+        # signing mesh: an explicit mesh wins; else data_shards devices
+        self.mesh = mesh
+        self._index = BandShardedLSHIndex(cfg.lsh_bands,
+                                          workers=cfg.lsh_workers)
         self._sigs: List[np.ndarray] = []
         self._sig_fn = jax.jit(self._signature_batch_impl)
         self._sig_one_fn = jax.jit(self._signature_unfused_impl)
+
+    @property
+    def _bands(self) -> List[Dict[bytes, List[int]]]:
+        """Legacy view of the index state (shard list, one dict per band)."""
+        return self._index.shards
+
+    def close(self) -> None:
+        """Release the index's probe thread pool (long-running services that
+        build dedupers per corpus should call this; the deduper stays
+        usable)."""
+        self._index.close()
 
     # -- signing ------------------------------------------------------------
 
@@ -107,11 +232,12 @@ class MinHashDeduper:
         """(D, S) bucket-padded batch + (D,) valid-window counts -> (D, k)."""
         if self.plan is not None:
             h1v = self.fam._lookup(self.fam_params, tokens)
-            return api.run(
+            return shard.run_auto(
                 self.plan, h1v, n_windows=n_windows,
                 operands={"sig": {"a": self.mh_params["a"],
                                   "b": self.mh_params["b"]}},
-                impl=self.cfg.impl)["sig"]
+                impl=self.cfg.impl, mesh=self.mesh,
+                data_shards=self.cfg.data_shards)["sig"]
         # generic-family fallback: unfused hash, then the engine's own
         # masked-min epilogue (k-chunked; sentinel applied post-remix)
         h = self.fam.hash_windows_batched(self.fam_params, tokens)
@@ -186,8 +312,7 @@ class MinHashDeduper:
     def _insert(self, sig: np.ndarray, keys: Sequence[bytes]) -> int:
         doc_id = len(self._sigs)
         self._sigs.append(sig)
-        for b, kb in enumerate(keys):
-            self._bands[b].setdefault(kb, []).append(doc_id)
+        self._index.insert(doc_id, keys)
         return doc_id
 
     def _best_match(self, sig: np.ndarray,
@@ -202,9 +327,10 @@ class MinHashDeduper:
     def add_batch(self, docs: Sequence[np.ndarray]) -> np.ndarray:
         """Dedup a document batch; returns (D,) bool duplicate flags.
 
-        Signing is one fused device call per shape bucket; candidate
-        generation is a vectorized group-by over band keys (np.unique per
-        band) against both the batch and the existing index. Only candidate
+        Signing is one fused (optionally shard_map'd) device call per shape
+        bucket; candidate generation probes every shard of the band-sharded
+        LSH index — a vectorized group-by per band, fanned out across bands
+        — against both the batch and the existing index. Only candidate
         pairs are Jaccard-verified, sequentially in document order, so the
         kept/duplicate decisions match the streaming per-document path
         exactly (a doc is only compared against *kept* predecessors).
@@ -215,24 +341,7 @@ class MinHashDeduper:
             return flags
         sigs = self.signature_many(docs)
         kb = self._band_keys(sigs)                       # (D, bands) void
-        index_cand: List[set] = [set() for _ in range(D)]
-        batch_cand: List[set] = [set() for _ in range(D)]
-        for b in range(self.cfg.lsh_bands):
-            uniq, inv = np.unique(kb[:, b], return_inverse=True)
-            hits = [self._bands[b].get(u.tobytes()) for u in uniq]
-            order = np.argsort(inv, kind="stable")       # groups, ids ascending
-            sorted_inv = inv[order]
-            starts = np.flatnonzero(
-                np.r_[True, sorted_inv[1:] != sorted_inv[:-1]])
-            ends = np.r_[starts[1:], len(order)]
-            for s, e in zip(starts, ends):
-                members = order[s:e]
-                hit = hits[sorted_inv[s]]
-                for pos, i in enumerate(members):
-                    if hit:
-                        index_cand[i].update(hit)
-                    if pos:                              # earlier batch docs
-                        batch_cand[i].update(members[:pos].tolist())
+        index_cand, batch_cand = self._index.probe_batch(kb)
         gid: List[Optional[int]] = [None] * D
         for i in range(D):
             cands = set(index_cand[i])
@@ -251,9 +360,7 @@ class MinHashDeduper:
         sig = self.signature(tokens)
         keys = [sig[b * self.rows : (b + 1) * self.rows].tobytes()
                 for b in range(self.cfg.lsh_bands)]
-        candidates = set()
-        for b, kb in enumerate(keys):
-            candidates.update(self._bands[b].get(kb, ()))
+        candidates = self._index.probe(keys)
         best_j, best_id = self._best_match(sig, sorted(candidates))
         if best_id is not None and best_j >= self.cfg.threshold:
             return True, best_id, best_j

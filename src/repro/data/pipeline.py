@@ -35,9 +35,12 @@ class PipelineConfig:
     num_hosts: int = 1
     # hash data-plane knobs, threaded into the services' SketchPlans: the
     # family is a first-class swappable parameter ("cyclic" | "general"),
-    # not a function-name prefix; impl picks the kernel dispatch
+    # not a function-name prefix; impl picks the kernel dispatch;
+    # data_shards routes dedup signing through shard.run_sharded over that
+    # many devices (stats/decontam instances take their own config knob)
     hash_family: str = "cyclic"
     impl: str = "auto"
+    data_shards: Optional[int] = None
 
 
 class PackedCorpus:
@@ -51,7 +54,8 @@ class PackedCorpus:
         if cfg.dedup:
             dd = MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed,
                                             family=cfg.hash_family,
-                                            impl=cfg.impl))
+                                            impl=cfg.impl,
+                                            data_shards=cfg.data_shards))
             # one fused signing pass per shape bucket + vectorized LSH
             # probing — not one device call per document
             flags = dd.add_batch(docs)

@@ -15,14 +15,14 @@ table), fed by the same one-jit hash graph.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CountMinSketch, Cyclic, HyperLogLog, make_family
-from repro.kernels import api, ops
+from repro.kernels import ops, shard
 from repro.kernels.plan import HashSpec, HLLSpec, SketchPlan
 
 
@@ -36,11 +36,16 @@ class StatsConfig:
     vocab: int = 1 << 17
     seed: int = 11
     impl: str = "auto"           # kernel dispatch: auto | pallas | ref
+    # shard the per-batch HLL pass over this many devices (None = single
+    # device). HLL registers merge by elementwise max, so the sharded pass's
+    # single pmax combine is bit-identical to the unsharded register file.
+    data_shards: Optional[int] = None
 
 
 class NgramStats:
-    def __init__(self, cfg: StatsConfig = None):
+    def __init__(self, cfg: StatsConfig = None, mesh=None):
         self.cfg = cfg = cfg or StatsConfig()
+        self.mesh = mesh
         key = jax.random.PRNGKey(cfg.seed)
         kf, kc = jax.random.split(key)
         self.fam = make_family("cyclic", n=cfg.ngram_n, L=cfg.L)
@@ -73,8 +78,9 @@ class NgramStats:
             # CMS reuses the same hash graph (XLA CSEs the shared rolling
             # hash on the ref path; on TPU the HLL leg never materialises it)
             h1v = self.fam._lookup(self.fp, tokens)
-            batch_regs = api.run(self.plan, h1v,
-                                 impl=self.cfg.impl)["hll"]
+            batch_regs = shard.run_auto(self.plan, h1v,
+                                        impl=self.cfg.impl, mesh=self.mesh,
+                                        data_shards=self.cfg.data_shards)["hll"]
             hll_regs = self.hll.merge(state["hll"], batch_regs)
             h = self.fam.pairwise_bits(
                 ops.cyclic(h1v, n=self.cfg.ngram_n, L=self.cfg.L,

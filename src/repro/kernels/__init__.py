@@ -8,12 +8,19 @@ itself) and their data-plane consumers.
                    requested sketch in ONE rolling-hash device pass; also
                    the shared validated prologue (flatten, impl dispatch,
                    S >= n check, n_windows normalization)
+- shard.py         multi-device plan execution: api.run wrapped in shard_map
+                   over a 1-D data mesh (row-parallel MinHash/Bloom outputs,
+                   one pmax combine for HLL registers; bit-identical at any
+                   device count via n_windows=0 padding rows)
 - cyclic.py        rolling CYCLIC hash: direct-window + parallel-prefix modes
 - general.py       rolling GENERAL hash (clmul shift-reduce, trace-time consts)
-- cyclic_fused.py  fused byte->fingerprint (one-hot MXU table lookup + window)
-- sketch_fused.py  the plan kernel: family-generic tile hashes feeding every
-                   requested sketch epilogue (state reduced in VMEM scratch
-                   inside the grid loop; window hashes never round-trip HBM)
+- sketch_fused.py  THE fused-kernel module: the plan kernel (family-generic
+                   tile hashes feeding every requested sketch epilogue, state
+                   reduced in VMEM scratch inside the grid loop with a
+                   lane-tiled MinHash remix; window hashes never round-trip
+                   HBM) plus the fused byte->fingerprint kernel (one-hot MXU
+                   table lookup + window); cyclic_fused.py is a deprecation
+                   shim over the latter
 - bloom.py         Bloom membership probes (standalone decontamination scan)
 - hll.py           HyperLogLog register update (standalone telemetry)
 - ops.py           jit wrappers for the plain hash kernels + DEPRECATED

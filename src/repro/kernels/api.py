@@ -18,8 +18,10 @@ entry points (``ops.cyclic_minhash`` / ``cyclic_hll`` / ``cyclic_bloom``,
 now deprecation shims over this engine).
 
 A plan is also the natural unit for multi-device sharding: ``run`` is pure
-in its array arguments, so a future ``shard_map`` over the batch dimension
-wraps it unchanged (ROADMAP follow-up).
+in its array arguments, so :func:`repro.kernels.shard.run_sharded` wraps the
+same executor in ``shard_map`` over the batch dimension (row-parallel
+MinHash/Bloom outputs, a ``pmax`` combine for the HLL register file) with
+bit-identical outputs at any device count.
 
 Example::
 
@@ -130,6 +132,61 @@ def _run_ref(plan, x, xb, nw, operands):
     return _ref.sketch_plan_ref(plan, x, xb, nw, operands)
 
 
+def validate(plan: SketchPlan, h1v, h1v_b, n_windows, operands, impl: str):
+    """The shared front half of :func:`run`: validate + normalize everything.
+
+    Returns ``(x (B, S), xb (B, S) | None, nw (B,), operands, lead, ref_path)``
+    ready for :func:`execute`. Kept separate so the sharded entry point
+    (:func:`repro.kernels.shard.run_sharded`) raises exactly the same errors
+    and feeds exactly the same normalized arrays as the single-device path.
+    """
+    if not isinstance(plan, SketchPlan):
+        raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
+    x, lead, ref_path = prepare(h1v, n=plan.hash.n, impl=impl)
+    B, S = x.shape
+    operands = _check_operands(plan, operands)
+    xb = None
+    if plan.needs_second_stream:
+        if h1v_b is None:
+            raise ValueError("plan contains a BloomSpec: the double-hashing "
+                             "probe stride needs a second stream h1v_b")
+        xb, _ = flatten(jnp.asarray(h1v_b))
+        if xb.shape != x.shape:
+            raise ValueError(f"h1v_b shape {xb.shape} != h1v shape {x.shape}")
+    elif h1v_b is not None:
+        raise ValueError("h1v_b given but no sketch in the plan consumes a "
+                         "second hash stream")
+    nw = norm_windows(n_windows, B, S - plan.hash.n + 1)
+    return x, xb, nw, operands, lead, ref_path
+
+
+def execute(plan: SketchPlan, x, xb, nw, operands, ref_path: bool,
+            **tile_kw) -> Dict[str, jnp.ndarray]:
+    """The shared back half: dispatch validated (B, S) arrays to the fused
+    Pallas kernel or the single-jit jnp executor. Pure in its array
+    arguments — safe to call under ``shard_map`` on a per-device shard."""
+    if ref_path:
+        return _run_ref(plan, x, xb, nw, operands)
+    return _sf.sketch_plan_fused(x, xb, nw, operands, plan=plan,
+                                 interpret=not on_tpu(), **tile_kw)
+
+
+def shape_outputs(plan: SketchPlan, out: Dict[str, jnp.ndarray],
+                  lead) -> Dict[str, jnp.ndarray]:
+    """Restore the caller's leading dims on per-row outputs (HLL registers
+    are corpus-level and pass through unchanged)."""
+    results = {}
+    for name, spec in plan.sketches:
+        o = out[name]
+        if isinstance(spec, MinHashSpec):
+            results[name] = o.reshape(lead + (spec.k,))
+        elif isinstance(spec, HLLSpec):
+            results[name] = o
+        else:
+            results[name] = o.reshape(lead)
+    return results
+
+
 def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
         operands=None, impl: str = "auto",
         **tile_kw) -> Dict[str, jnp.ndarray]:
@@ -155,36 +212,7 @@ def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
       ``{sketch_name: result}`` — MinHash (..., k) uint32, HLL (2^b,) int32
       (reduced over the whole batch), Bloom (...,) int32 hit counts.
     """
-    if not isinstance(plan, SketchPlan):
-        raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
-    x, lead, ref_path = prepare(h1v, n=plan.hash.n, impl=impl)
-    B, S = x.shape
-    operands = _check_operands(plan, operands)
-    xb = None
-    if plan.needs_second_stream:
-        if h1v_b is None:
-            raise ValueError("plan contains a BloomSpec: the double-hashing "
-                             "probe stride needs a second stream h1v_b")
-        xb, _ = flatten(jnp.asarray(h1v_b))
-        if xb.shape != x.shape:
-            raise ValueError(f"h1v_b shape {xb.shape} != h1v shape {x.shape}")
-    elif h1v_b is not None:
-        raise ValueError("h1v_b given but no sketch in the plan consumes a "
-                         "second hash stream")
-    nw = norm_windows(n_windows, B, S - plan.hash.n + 1)
-
-    if ref_path:
-        out = _run_ref(plan, x, xb, nw, operands)
-    else:
-        out = _sf.sketch_plan_fused(x, xb, nw, operands, plan=plan,
-                                    interpret=not on_tpu(), **tile_kw)
-    results = {}
-    for name, spec in plan.sketches:
-        o = out[name]
-        if isinstance(spec, MinHashSpec):
-            results[name] = o.reshape(lead + (spec.k,))
-        elif isinstance(spec, HLLSpec):
-            results[name] = o
-        else:
-            results[name] = o.reshape(lead)
-    return results
+    x, xb, nw, operands, lead, ref_path = validate(
+        plan, h1v, h1v_b, n_windows, operands, impl)
+    out = execute(plan, x, xb, nw, operands, ref_path, **tile_kw)
+    return shape_outputs(plan, out, lead)

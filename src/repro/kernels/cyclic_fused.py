@@ -1,99 +1,21 @@
-"""Pallas TPU kernel: fused h1-lookup + rolling CYCLIC hash for byte streams.
+"""DEPRECATED module shim — the fused byte->fingerprint kernel moved.
 
-The paper's inner loop is `h1[c]` — an L1 table lookup on a CPU. TPUs have no
-cheap per-lane gather, but they have an idle MXU during this memory-bound
-pass, so we ADAPT (DESIGN.md §3): the 256-entry table lookup becomes a
-one-hot matmul. The uint32 table is split into two 16-bit halves (exactly
-representable in f32), the one-hot (T×256) activation matrix hits the MXU
-once per half, and the halves are reassembled with integer ops. The rolling
-window XOR then proceeds exactly as in `cyclic.py`.
-
-This keeps the *entire* byte→fingerprint path in one VMEM-resident kernel:
-tokens in, window hashes out — the TPU equivalent of the paper's "single
-lookup + two ops per character" claim.
+``cyclic_rolling_fused`` (one-hot MXU h1 lookup + rolling CYCLIC window
+hash) now lives in :mod:`repro.kernels.sketch_fused`, the single fused-
+kernel module, alongside the plan kernel whose grid/halo/BlockSpec idiom it
+shares. This shim re-exports it bit-identically for old import sites and
+warns once per process; ``ops.cyclic_fused`` (the public entry point) is
+unchanged.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.sketch_fused import (SIGMA,  # noqa: F401
+                                        cyclic_rolling_fused)
 
-from repro.kernels.cyclic import _rotl_const
-
-_U32 = jnp.uint32
-SIGMA = 256  # byte alphabet
-
-
-def _lookup_mxu(tokens, table_lo, table_hi):
-    """Per-lane gather via one-hot MXU matmul: values < 2^16 are f32-exact."""
-    flat = tokens.reshape(-1)                          # (T,)
-    onehot = (flat[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (flat.shape[0], SIGMA), 1)).astype(jnp.float32)
-    lo = jax.lax.dot(onehot, table_lo[:, None], precision="highest",
-                     preferred_element_type=jnp.float32)
-    hi = jax.lax.dot(onehot, table_hi[:, None], precision="highest",
-                     preferred_element_type=jnp.float32)
-    v = lo[:, 0].astype(_U32) | (hi[:, 0].astype(_U32) << np.uint32(16))
-    return v.reshape(tokens.shape)
-
-
-def _fused_kernel(tok_ref, nxt_ref, tlo_ref, thi_ref, o_ref, *, n: int,
-                  L: int, block_s: int):
-    toks = tok_ref[...]
-    if n > 1:
-        cat = jnp.concatenate([toks, nxt_ref[...][:, : n - 1]], axis=1)
-    else:
-        cat = toks
-    v = _lookup_mxu(cat, tlo_ref[...], thi_ref[...])
-    m = np.uint32((1 << L) - 1) if L < 32 else np.uint32(0xFFFFFFFF)
-    v = v & m
-    acc = jnp.zeros_like(toks, dtype=_U32)
-    for k in range(n):
-        acc = acc ^ _rotl_const(v[:, k : k + block_s], (n - 1 - k) % L, L)
-    o_ref[...] = acc
-
-
-@functools.partial(jax.jit, static_argnames=("n", "L", "block_b", "block_s",
-                                             "interpret"))
-def cyclic_rolling_fused(tokens: jnp.ndarray, table: jnp.ndarray, *, n: int,
-                         L: int = 32, block_b: int = 8, block_s: int = 1024,
-                         interpret: bool = False) -> jnp.ndarray:
-    """Fused byte->fingerprint pipeline. tokens (B, S) int32 in [0, 256),
-    table (256,) uint32 -> (B, S-n+1) uint32."""
-    assert tokens.ndim == 2
-    assert table.shape == (SIGMA,)
-    B, S = tokens.shape
-    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
-    if n - 1 > block_s:
-        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
-    Bp = -(-B // block_b) * block_b
-    Sp = -(-S // block_s) * block_s
-    t = jnp.pad(tokens.astype(jnp.int32), ((0, Bp - B), (0, Sp - S)))
-    table_lo = (table & np.uint32(0xFFFF)).astype(jnp.float32)
-    table_hi = (table >> np.uint32(16)).astype(jnp.float32)
-    grid = (Bp // block_b, Sp // block_s)
-    nsb = grid[1]
-
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, n=n, L=L, block_s=block_s),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((block_b, block_s),
-                         lambda b, j, _n=nsb: (b, jnp.minimum(j + 1, _n - 1)),
-                         memory_space=pltpu.VMEM),
-            # the 1 KiB table is resident in VMEM for every grid step
-            pl.BlockSpec((SIGMA,), lambda b, j: (0,), memory_space=pltpu.VMEM),
-            pl.BlockSpec((SIGMA,), lambda b, j: (0,), memory_space=pltpu.VMEM),
-        ],
-        out_specs=pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
-                               memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((Bp, Sp), _U32),
-        interpret=interpret,
-    )(t, t, table_lo, table_hi)
-    return out[:B, : S - n + 1]
+warnings.warn(
+    "repro.kernels.cyclic_fused is deprecated; import cyclic_rolling_fused "
+    "from repro.kernels.sketch_fused (the single fused-kernel module) or "
+    "call ops.cyclic_fused",
+    DeprecationWarning, stacklevel=2)

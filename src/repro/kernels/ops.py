@@ -33,8 +33,8 @@ import jax.numpy as jnp
 from repro.kernels import api
 from repro.kernels import ref as _ref
 from repro.kernels.cyclic import cyclic_rolling
-from repro.kernels.cyclic_fused import cyclic_rolling_fused
 from repro.kernels.general import general_rolling
+from repro.kernels.sketch_fused import cyclic_rolling_fused
 from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
                                 SketchPlan)
 

@@ -1,0 +1,142 @@
+"""Multi-device execution of a :class:`~repro.kernels.plan.SketchPlan`.
+
+The sketches this engine runs are *mergeable reductions* (Lemire & Kaser,
+"One-Pass, One-Hash n-Gram Statistics Estimation"): a MinHash signature row
+and a Bloom hit count depend only on their own document's windows, and an
+HLL register file merges by elementwise max. That makes the whole
+hash->sketch data-plane embarrassingly parallel over documents with a tiny
+combine step — so :func:`run_sharded` is just :func:`repro.kernels.api.run`
+wrapped in ``shard_map`` over the batch dimension of a 1-D ``data`` mesh:
+
+* the (B, S) h1v batch (and the second Bloom stream) is row-sharded,
+* sketch operands (MinHash remix lanes, the packed Bloom filter) are
+  replicated,
+* MinHash signatures and Bloom counts come back row-sharded (no combine),
+* the HLL register file gets a single ``pmax`` over the mesh axis — the
+  sketch's own merge operator, so the combine is exact, not approximate.
+
+Bit-identical outputs at any device count: a batch that does not divide the
+shard count is padded with rows whose ``n_windows`` is 0 — the same masking
+the kernels already honor for bucket padding — so padded rows contribute a
+sentinel signature (sliced off), a zero Bloom count (sliced off), and rank-0
+HLL updates (no register effect). Min and max are associative and
+commutative on integers, so re-bracketing the reduction across devices
+cannot change a single bit.
+
+Off-TPU the per-shard executor is the same single-jit jnp graph ``api.run``
+uses (``impl="auto"``), so 8 virtual CPU devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) exercise the real
+partitioning in CI; on a TPU mesh each shard runs the fused Pallas plan
+kernel natively.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import api
+from repro.kernels.plan import HLLSpec, SketchPlan
+
+AXIS = "data"
+
+
+def data_mesh(data_shards: Optional[int] = None) -> Mesh:
+    """A 1-D mesh over the first ``data_shards`` devices (default: all)."""
+    devs = jax.devices()
+    d = len(devs) if data_shards is None else int(data_shards)
+    if not 1 <= d <= len(devs):
+        raise ValueError(
+            f"data_shards={data_shards} not in [1, {len(devs)}] "
+            f"(available devices: {len(devs)})")
+    return Mesh(np.array(devs[:d]), (AXIS,))
+
+
+def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, rows),) + ((0, 0),) * (x.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "mesh", "ref_path",
+                                             "tile"))
+def _run_sharded(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
+                 x, xb, nw, operands):
+    """shard_map'd executor over the padded (Bp, S) batch (Bp % d == 0)."""
+
+    def local(x, xb, nw, operands):
+        out = api.execute(plan, x, xb, nw, operands, ref_path, **dict(tile))
+        for name, spec in plan.sketches:
+            if isinstance(spec, HLLSpec):
+                # the HLL merge operator IS elementwise max, so one pmax
+                # over the mesh axis reproduces the global register file
+                out[name] = jax.lax.pmax(out[name], AXIS)
+        return out
+
+    row = P(AXIS)
+    out_specs = {name: P() if isinstance(spec, HLLSpec) else row
+                 for name, spec in plan.sketches}
+    op_specs = jax.tree_util.tree_map(lambda _: P(), operands)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(row, row if xb is not None else None, row, op_specs),
+        out_specs=out_specs, check_rep=False)(x, xb, nw, operands)
+
+
+def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
+                n_windows=None, operands=None, impl: str = "auto",
+                mesh: Optional[Mesh] = None,
+                data_shards: Optional[int] = None,
+                **tile_kw) -> Dict[str, jnp.ndarray]:
+    """Multi-device :func:`repro.kernels.api.run`; same arguments, same
+    outputs, bit-identical at any device count.
+
+    Extra knobs:
+      mesh: an explicit 1-D :class:`jax.sharding.Mesh` whose (single) axis
+        the batch dimension is sharded over. Takes precedence over
+        ``data_shards``.
+      data_shards: shortcut — build a 1-D mesh over the first ``data_shards``
+        devices (default: every device).
+
+    The batch is padded to a multiple of the shard count with ``n_windows=0``
+    rows (excluded from every sketch reduction by the kernels' own masking)
+    and the padding is sliced off on return.
+    """
+    if mesh is None:
+        mesh = data_mesh(data_shards)
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"run_sharded needs a 1-D data mesh, got axes "
+                         f"{mesh.axis_names}")
+    x, xb, nw, operands, lead, ref_path = api.validate(
+        plan, h1v, h1v_b, n_windows, operands, impl)
+    B = x.shape[0]
+    d = mesh.devices.size
+    pad = -B % d
+    if pad:
+        # padded rows are fully masked (n_windows=0): sentinel MinHash rows
+        # and zero Bloom counts are sliced off below; HLL contributions are
+        # rank 0, which never wins a register max
+        x = _pad_rows(x, pad)
+        if xb is not None:
+            xb = _pad_rows(xb, pad)
+        nw = jnp.pad(nw, (0, pad))
+    tile = tuple(sorted(tile_kw.items()))
+    out = _run_sharded(plan, mesh, ref_path, tile, x, xb, nw, operands)
+    out = {name: (out[name] if isinstance(spec, HLLSpec) else out[name][:B])
+           for name, spec in plan.sketches}
+    return api.shape_outputs(plan, out, lead)
+
+
+def run_auto(plan: SketchPlan, h1v: jnp.ndarray, *,
+             mesh: Optional[Mesh] = None,
+             data_shards: Optional[int] = None,
+             **kw) -> Dict[str, jnp.ndarray]:
+    """Single-device ``api.run`` unless a mesh or shard count was requested —
+    the one dispatch the data-plane services (dedup/stats/decontam) thread
+    their ``mesh``/``data_shards`` knobs through."""
+    if mesh is None and data_shards is None:
+        return api.run(plan, h1v, **kw)
+    return run_sharded(plan, h1v, mesh=mesh, data_shards=data_shards, **kw)

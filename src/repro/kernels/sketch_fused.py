@@ -45,14 +45,23 @@ Design (the grid-carried scratch-accumulator idiom):
   outside a vector register. GENERAL keeps all L bits (pairwise independent
   as-is).
 
-VMEM budgets: the MinHash epilogue materialises a ``(block_b, block_s, k)``
-remix tile and the HLL epilogue a ``(block_b*block_s, m)`` one-hot tile, so
-``block_s`` defaults shrink with the sketch mix (and the HLL cap always
-applies); shrink further for large ``k``/``m`` on real hardware.
+VMEM budgets: the MinHash epilogue is *lane-tiled* — its live remix tile is
+``(block_b, block_s, min(k, lane_tile))``, independent of the signature
+width, so ``block_s`` no longer shrinks at k=64 (pass 1 reduces each lane
+chunk's candidate minima, pass 2 folds them into the ``(block_b, k)``
+scratch). The HLL epilogue still materialises a ``(block_b*block_s, m)``
+one-hot tile, so its cap scales with ``m``; both budgets are enforced by
+``_resolve_block_s`` against a ~4 MB tile target.
 
 The legacy single-sketch entry points (``cyclic_minhash_fused`` /
 ``cyclic_hll_fused`` / ``cyclic_bloom_fused``) are thin wrappers that build
 a one-sketch plan — one implementation, bit-identical by construction.
+
+This module is also the home of the *other* fused kernel,
+:func:`cyclic_rolling_fused` (byte->fingerprint: one-hot MXU h1 lookup +
+rolling CYCLIC window hash), folded in from the former
+``kernels/cyclic_fused.py`` so there is exactly one fused-kernel module;
+``repro.kernels.cyclic_fused`` remains as a deprecation shim.
 """
 from __future__ import annotations
 
@@ -72,8 +81,15 @@ from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
 _U32 = jnp.uint32
 _SENTINEL = np.uint32(0xFFFFFFFF)
 
-# per-sketch default sequence tiles (a multi-sketch plan takes the min)
-_BLOCK_S_DEFAULTS = {MinHashSpec: 512, HLLSpec: 256, BloomSpec: 1024}
+# MinHash remix lane-tile width: the kernel's live remix tile is
+# (block_b, block_s, min(k, _MINHASH_LANE_TILE)) regardless of k, so
+# block_s no longer shrinks with the signature width. 16 lanes keep k<=16
+# plans on the exact pre-lane-tiling computation (one chunk).
+_MINHASH_LANE_TILE = 16
+
+# per-sketch default sequence tiles (a multi-sketch plan takes the min);
+# the lane-tiled remix admits a 1024-wide MinHash tile even at k=64
+_BLOCK_S_DEFAULTS = {MinHashSpec: 1024, HLLSpec: 256, BloomSpec: 1024}
 
 
 def _tile_window_hashes(x, halo_src, *, hs: HashSpec, block_s: int):
@@ -112,13 +128,28 @@ def _minhash_tile(h, valid, a_ref, b_ref, o_ref, acc_ref, j):
     def _init():
         acc_ref[...] = jnp.full_like(acc_ref, _SENTINEL)
 
-    # affine remix per signature lane, reduced over this tile's windows;
-    # invalid (padded) windows are excluded from the min entirely, so the
-    # signature of a padded row is bit-identical to the unpadded one
-    mixed = (a_ref[...][None, None, :] * h[:, :, None]
-             + b_ref[...][None, None, :])                # (bb, bs, k)
-    mixed = jnp.where(valid[:, :, None], mixed, _SENTINEL)
-    acc_ref[...] = jnp.minimum(acc_ref[...], jnp.min(mixed, axis=1))
+    # lane-tiled two-pass remix: pass 1 walks the k signature lanes in
+    # _MINHASH_LANE_TILE-wide chunks — each chunk remixes the tile's hashes
+    # for just those lanes and reduces the window axis to per-lane candidate
+    # minima — so the live remix tile is (block_b, block_s, lane_tile), not
+    # (block_b, block_s, k); pass 2 folds the (block_b, k) candidates into
+    # the scratch accumulator. Invalid (padded) windows are excluded from
+    # the min entirely (post-remix sentinel substitution), so the signature
+    # of a padded row is bit-identical to the unpadded one. Min is
+    # associative/commutative on uint32, so the chunked reduction is
+    # bit-identical to the monolithic one; for k <= lane_tile it IS the
+    # monolithic one (single chunk).
+    a, b = a_ref[...], b_ref[...]
+    cand = []
+    for s in range(0, a.shape[0], _MINHASH_LANE_TILE):
+        ac = a[s : s + _MINHASH_LANE_TILE]
+        bc = b[s : s + _MINHASH_LANE_TILE]
+        mixed = (ac[None, None, :] * h[:, :, None]
+                 + bc[None, None, :])                   # (bb, bs, lane_tile)
+        mixed = jnp.where(valid[:, :, None], mixed, _SENTINEL)
+        cand.append(jnp.min(mixed, axis=1))             # pass 1: per-lane min
+    acc_ref[...] = jnp.minimum(acc_ref[...],            # pass 2: fold lanes
+                               jnp.concatenate(cand, axis=-1))
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _flush():
@@ -224,6 +255,16 @@ def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
                         acc_ref, j)
 
 
+def _budget_cap(lanes: int, block_b: int, n: int) -> int:
+    """Largest pow2 block_s keeping a (block_b, block_s, lanes) int32 tile
+    within ~4 MB of VMEM (the halo still sets a floor)."""
+    cap = max(32, (4 << 20) // (4 * lanes * block_b))
+    cap = 1 << int(np.floor(np.log2(cap)))
+    if n > 1 and n - 1 > cap:
+        cap = 1 << int(np.ceil(np.log2(n - 1)))
+    return cap
+
+
 def _resolve_block_s(plan: SketchPlan, S: int, block_b: int, block_s):
     """Sequence-tile width honouring every requested sketch's VMEM budget."""
     if block_s is None:
@@ -233,16 +274,15 @@ def _resolve_block_s(plan: SketchPlan, S: int, block_b: int, block_s):
     n = plan.hash.n
     for _, spec in plan.sketches:
         if isinstance(spec, HLLSpec):
-            # bound the (block_b*block_s, m) one-hot reduction tile to ~4 MB
-            # of VMEM: at the production m=4096 the default tiles would need
-            # 32 MB, which no core has — shrink block_s (the halo still sets
-            # a floor)
-            m = 1 << spec.b
-            cap = max(32, (4 << 20) // (4 * m * block_b))
-            cap = 1 << int(np.floor(np.log2(cap)))
-            if n > 1 and n - 1 > cap:
-                cap = 1 << int(np.ceil(np.log2(n - 1)))
-            block_s = min(block_s, cap)
+            # the (block_b*block_s, m) one-hot reduction tile: at the
+            # production m=4096 the default tiles would need 32 MB, which no
+            # core has — shrink block_s
+            block_s = min(block_s, _budget_cap(1 << spec.b, block_b, n))
+        elif isinstance(spec, MinHashSpec):
+            # the lane-tiled remix budgets min(k, lane_tile) lanes, not k:
+            # block_s no longer shrinks as the signature widens to k=64
+            lanes = min(spec.k, _MINHASH_LANE_TILE)
+            block_s = min(block_s, _budget_cap(lanes, block_b, n))
     if n - 1 > block_s:
         raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
     return block_s
@@ -393,3 +433,92 @@ def cyclic_bloom_fused(h1va: jnp.ndarray, h1vb: jnp.ndarray,
                              {"bloom": {"bits": bits}}, plan=plan,
                              block_b=block_b, block_s=block_s,
                              interpret=interpret)["bloom"]
+
+
+# ---------------------------------------------------------------------------
+# Fused byte->fingerprint kernel (h1 lookup + rolling CYCLIC hash), folded in
+# from the former kernels/cyclic_fused.py
+# ---------------------------------------------------------------------------
+#
+# The paper's inner loop is `h1[c]` — an L1 table lookup on a CPU. TPUs have
+# no cheap per-lane gather, but they have an idle MXU during this
+# memory-bound pass, so we ADAPT: the 256-entry table lookup becomes a
+# one-hot matmul. The uint32 table is split into two 16-bit halves (exactly
+# representable in f32), the one-hot (T x 256) activation matrix hits the
+# MXU once per half, and the halves are reassembled with integer ops. The
+# rolling window XOR then proceeds exactly as in `cyclic.py` — the entire
+# byte->fingerprint path stays in one VMEM-resident kernel: tokens in,
+# window hashes out.
+
+SIGMA = 256  # byte alphabet
+
+
+def _lookup_mxu(tokens, table_lo, table_hi):
+    """Per-lane gather via one-hot MXU matmul: values < 2^16 are f32-exact."""
+    flat = tokens.reshape(-1)                          # (T,)
+    onehot = (flat[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (flat.shape[0], SIGMA), 1)).astype(jnp.float32)
+    lo = jax.lax.dot(onehot, table_lo[:, None], precision="highest",
+                     preferred_element_type=jnp.float32)
+    hi = jax.lax.dot(onehot, table_hi[:, None], precision="highest",
+                     preferred_element_type=jnp.float32)
+    v = lo[:, 0].astype(_U32) | (hi[:, 0].astype(_U32) << np.uint32(16))
+    return v.reshape(tokens.shape)
+
+
+def _lookup_fused_kernel(tok_ref, nxt_ref, tlo_ref, thi_ref, o_ref, *, n: int,
+                         L: int, block_s: int):
+    toks = tok_ref[...]
+    if n > 1:
+        cat = jnp.concatenate([toks, nxt_ref[...][:, : n - 1]], axis=1)
+    else:
+        cat = toks
+    v = _lookup_mxu(cat, tlo_ref[...], thi_ref[...])
+    m = np.uint32((1 << L) - 1) if L < 32 else np.uint32(0xFFFFFFFF)
+    v = v & m
+    acc = jnp.zeros_like(toks, dtype=_U32)
+    for k in range(n):
+        acc = acc ^ _rotl_const(v[:, k : k + block_s], (n - 1 - k) % L, L)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("n", "L", "block_b", "block_s",
+                                             "interpret"))
+def cyclic_rolling_fused(tokens: jnp.ndarray, table: jnp.ndarray, *, n: int,
+                         L: int = 32, block_b: int = 8, block_s: int = 1024,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Fused byte->fingerprint pipeline. tokens (B, S) int32 in [0, 256),
+    table (256,) uint32 -> (B, S-n+1) uint32."""
+    assert tokens.ndim == 2
+    assert table.shape == (SIGMA,)
+    B, S = tokens.shape
+    block_s = min(block_s, max(256, 1 << int(np.ceil(np.log2(max(S, 1))))))
+    if n - 1 > block_s:
+        raise ValueError(f"halo n-1={n-1} exceeds block_s={block_s}")
+    Bp = -(-B // block_b) * block_b
+    Sp = -(-S // block_s) * block_s
+    t = jnp.pad(tokens.astype(jnp.int32), ((0, Bp - B), (0, Sp - S)))
+    table_lo = (table & np.uint32(0xFFFF)).astype(jnp.float32)
+    table_hi = (table >> np.uint32(16)).astype(jnp.float32)
+    grid = (Bp // block_b, Sp // block_s)
+    nsb = grid[1]
+
+    out = pl.pallas_call(
+        functools.partial(_lookup_fused_kernel, n=n, L=L, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_b, block_s),
+                         lambda b, j, _n=nsb: (b, jnp.minimum(j + 1, _n - 1)),
+                         memory_space=pltpu.VMEM),
+            # the 1 KiB table is resident in VMEM for every grid step
+            pl.BlockSpec((SIGMA,), lambda b, j: (0,), memory_space=pltpu.VMEM),
+            pl.BlockSpec((SIGMA,), lambda b, j: (0,), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_s), lambda b, j: (b, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Bp, Sp), _U32),
+        interpret=interpret,
+    )(t, t, table_lo, table_hi)
+    return out[:B, : S - n + 1]

@@ -9,6 +9,10 @@
 # --quick — kernel/plan parity tests only (the hash->sketch data-plane):
 #   fast signal when iterating on kernels/, skipping the model/train/serve
 #   suites.
+#
+# --dist — the multi-device suites only: run_sharded vs api.run parity at
+#   1/2/4/8 virtual devices (tests/test_shard.py) plus the sharded-train
+#   mesh tests, under the 8-virtual-device XLA flag.
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -17,5 +21,9 @@ if [[ "${1:-}" == "--quick" ]]; then
   shift
   exec python -m pytest -x -q tests/test_kernels.py tests/test_sketch_fused.py \
     tests/test_plan_api.py "$@"
+fi
+if [[ "${1:-}" == "--dist" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_shard.py tests/test_distributed.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -1,0 +1,13 @@
+"""Expose 8 virtual CPU devices before jax initializes, so the multi-device
+parity tests (tests/test_shard.py, tests/test_distributed.py) exercise a
+real partitioning even under a bare ``pytest`` invocation. ``test.sh``
+exports the same flag; an operator-provided XLA_FLAGS that already pins a
+device count wins."""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=8 " + flags).strip()

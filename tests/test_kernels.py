@@ -10,8 +10,8 @@ from _hypothesis_compat import given, settings, st
 from repro.core import gf2, make_family
 from repro.kernels import ref
 from repro.kernels.cyclic import cyclic_rolling
-from repro.kernels.cyclic_fused import cyclic_rolling_fused
 from repro.kernels.general import general_rolling
+from repro.kernels.sketch_fused import cyclic_rolling_fused
 
 KEY = jax.random.PRNGKey(0)
 

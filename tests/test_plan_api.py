@@ -51,6 +51,7 @@ IMPLS = [("ref", {}), ("pallas", dict(block_b=2, block_s=256))]
 @pytest.mark.parametrize("n", [2, 8, 25])
 @pytest.mark.parametrize("impl,tile", IMPLS)
 @pytest.mark.parametrize("padded", [False, True])
+@pytest.mark.filterwarnings("ignore:ops.cyclic_:DeprecationWarning")
 def test_plan_matches_legacy_cyclic(n, impl, tile, padded):
     B, S = 3, 300
     x = _h1v((B, S), seed=n)
@@ -249,6 +250,22 @@ def test_run_validation_errors():
         api.run(plan, x, h1v_b=x, operands={"sig": dict(p)})
     with pytest.raises(ValueError, match="packed filter shape"):
         api.run(bplan, x, h1v_b=x, operands={"dec": {"bits": _h1v((7,))}})
+
+
+def test_cyclic_fused_module_is_a_deprecation_shim():
+    # the byte->fingerprint kernel was folded into sketch_fused (the one
+    # fused-kernel module); the old module path still resolves, warns, and
+    # re-exports the identical function object
+    import importlib
+    import sys
+
+    from repro.kernels import sketch_fused
+    sys.modules.pop("repro.kernels.cyclic_fused", None)
+    with pytest.warns(DeprecationWarning,
+                      match="repro.kernels.cyclic_fused is deprecated"):
+        shim = importlib.import_module("repro.kernels.cyclic_fused")
+    assert shim.cyclic_rolling_fused is sketch_fused.cyclic_rolling_fused
+    assert shim.SIGMA == sketch_fused.SIGMA == 256
 
 
 def test_plain_hash_entry_points_validate_too():

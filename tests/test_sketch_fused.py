@@ -97,6 +97,7 @@ def test_bloom_kernel_vs_ref(B, S, n, k, log2_m):
 @pytest.mark.parametrize("impl,tile", [("ref", {}),
                                        ("pallas", dict(block_b=2,
                                                        block_s=256))])
+@pytest.mark.filterwarnings("ignore:ops.cyclic_:DeprecationWarning")
 def test_fused_signature_matches_signature_batch(n, impl, tile):
     fam = make_family("cyclic", n=n, L=32)
     params = fam.init(KEY, 4096)
@@ -122,6 +123,7 @@ def test_fused_signature_matches_signature_batch(n, impl, tile):
 @pytest.mark.parametrize("impl,tile", [("ref", {}),
                                        ("pallas", dict(block_b=2,
                                                        block_s=256))])
+@pytest.mark.filterwarnings("ignore:ops.cyclic_:DeprecationWarning")
 def test_fused_hll_matches_core_update(impl, tile):
     n = 8
     fam = make_family("cyclic", n=n, L=32)
@@ -137,6 +139,7 @@ def test_fused_hll_matches_core_update(impl, tile):
 @pytest.mark.parametrize("impl,tile", [("ref", {}),
                                        ("pallas", dict(block_b=2,
                                                        block_s=256))])
+@pytest.mark.filterwarnings("ignore:ops.cyclic_:DeprecationWarning")
 def test_fused_bloom_matches_core_contains(impl, tile):
     n = 8
     fa = make_family("cyclic", n=n, L=32)
