@@ -29,7 +29,7 @@ def main() -> None:
             os.environ["XLA_FLAGS"] = (
                 "--xla_force_host_platform_device_count=8 " + _flags).strip()
     from benchmarks import (fig1_speed, pipeline_bench, shard_scaling,
-                            sketch_fusion, table1_properties)
+                            sketch_fusion, stats_onepass, table1_properties)
     n_chars = int(os.environ.get("REPRO_BENCH_CHARS", 4_300_000))
     rows = []
     print("name,us_per_call,derived")
@@ -41,7 +41,8 @@ def main() -> None:
                     (fig1_speed, {"n_chars": n_chars}),
                     (table1_properties, {}),
                     (pipeline_bench, {}),
-                    (sketch_fusion, {})):
+                    (sketch_fusion, {}),
+                    (stats_onepass, {})):
         try:
             section = mod.run(**kw)
         except Exception as e:  # noqa: BLE001 - a broken section must not
@@ -64,7 +65,7 @@ def main() -> None:
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr3.json"))
+                     "BENCH_pr4.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

@@ -1,0 +1,121 @@
+"""One-pass fused stats update vs the pre-PR4 two-graph update, and the
+CountMin in-kernel vs scatter-add epilogue sweep over ``log2_width``.
+
+Section 1 re-creates the old ``NgramStats._update_impl`` data-plane as the
+baseline: a one-HLL plan execution PLUS a second rolling-hash graph
+(``ops.cyclic``) feeding the core ``CountMinSketch.add`` scatter — two
+window-hash evaluations per batch. The new path is one two-sketch plan
+execution. Outputs are asserted bit-identical first, so the speedup is
+never measured against a semantically different computation. Note the CPU
+caveat: on the jnp ref path XLA CSEs the baseline's duplicated rolling
+hash inside its single jit, so the two time nearly identically here — the
+structural win (ONE kernel dispatch, no second hash graph feeding HBM) is
+a TPU property, pinned by the one-``pallas_call`` jaxpr check in
+``tests/test_data.py`` rather than by this CPU wall-clock.
+
+Section 2 sweeps ``CountMinSpec.log2_width`` across the in-kernel/scatter
+threshold: the jnp executor (the production CPU path, always scatter-add)
+over widening tables, and the Pallas interpret-mode kernel with the
+threshold forced both ways at a fixed narrow width — interpret mode is not
+TPU-representative in absolute terms, but it runs the identical kernel
+program, so the in-kernel vs fallback *structure* is what is recorded.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.stats import NgramStats, StatsConfig
+from repro.kernels import api, ops
+from repro.kernels.plan import CountMinSpec, HashSpec, HLLSpec, SketchPlan
+
+
+def _timeit(fn, reps=3):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _one_pass_vs_two_graph(rows):
+    B, S = 16, 1024
+    st = NgramStats(StatsConfig(vocab=1 << 16, hll_b=10, cms_log2_width=12))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, 1 << 16, size=(B, S)), jnp.uint32)
+    state = st.init_state()
+    hll_plan = SketchPlan(st.plan.hash, (("hll", HLLSpec(b=st.cfg.hll_b)),))
+
+    def legacy_impl(state, tokens):
+        # the pre-PR4 update: fused HLL pass + a SECOND rolling-hash graph
+        # for the CMS scatter
+        h1v = st.fam._lookup(st.fp, tokens)
+        regs = api.run(hll_plan, h1v)["hll"]
+        h = st.fam.pairwise_bits(
+            ops.cyclic(h1v, n=st.cfg.ngram_n, L=st.cfg.L)).reshape(-1)
+        cms = st.cms.add({**st._cms_params, "table": state["cms"]}, h)
+        return {"hll": st.hll.merge(state["hll"], regs),
+                "cms": cms["table"], "tokens": state["tokens"]}
+
+    legacy = jax.jit(legacy_impl)
+    new_out = st.update(state, toks)
+    old_out = legacy(state, toks)
+    for leg in ("hll", "cms"):            # same bits, fair race
+        np.testing.assert_array_equal(np.asarray(new_out[leg]),
+                                      np.asarray(old_out[leg]))
+
+    t_new = _timeit(lambda: jax.block_until_ready(st.update(state, toks)))
+    t_old = _timeit(lambda: jax.block_until_ready(legacy(state, toks)))
+    rows.append({"name": f"stats_update_two_graph_{B}x{S}",
+                 "us_per_call": t_old * 1e6,
+                 "derived": "hll plan + separate cms hash graph"})
+    rows.append({"name": f"stats_update_one_pass_{B}x{S}",
+                 "us_per_call": t_new * 1e6,
+                 "derived": f"{t_old / t_new:.2f}x vs two-graph"})
+
+
+def _cms_width_sweep(rows):
+    B, S = 8, 1024
+    x = jax.random.bits(jax.random.PRNGKey(1), (B, S), dtype=jnp.uint32)
+    depth = 4
+    a = jax.random.bits(jax.random.PRNGKey(2), (depth,),
+                        dtype=jnp.uint32) | jnp.uint32(1)
+    b = jax.random.bits(jax.random.PRNGKey(3), (depth,), dtype=jnp.uint32)
+    operands = {"freq": {"a": a, "b": b}}
+    hs = HashSpec(family="cyclic", n=8)
+
+    def plan(lw, thr):
+        return SketchPlan(hs, (("freq", CountMinSpec(
+            depth=depth, log2_width=lw, in_kernel_max_log2_width=thr)),))
+
+    for lw in (8, 12, 16):
+        t = _timeit(lambda p=plan(lw, 0): jax.block_until_ready(
+            api.run(p, x, operands=operands, impl="ref")["freq"]))
+        rows.append({"name": f"cms_ref_scatter_w{lw}",
+                     "us_per_call": t * 1e6,
+                     "derived": f"jnp scatter-add, 2^{lw} cols"})
+
+    # identical kernel program both ways; only the epilogue mode differs
+    xs = x[:4, :512]
+    for lw in (8, 10):
+        for mode, thr in (("inkernel", 12), ("scatter", 0)):
+            p = plan(lw, thr)
+            t = _timeit(lambda p=p: jax.block_until_ready(
+                api.run(p, xs, operands=operands, impl="pallas",
+                        block_b=2, block_s=256)["freq"]))
+            rows.append({"name": f"cms_interp_{mode}_w{lw}",
+                         "us_per_call": t * 1e6,
+                         "derived": f"pallas interpret, 2^{lw} cols, "
+                                    f"threshold={thr}"})
+
+
+def run():
+    rows = []
+    _one_pass_vs_two_graph(rows)
+    _cms_width_sweep(rows)
+    return rows

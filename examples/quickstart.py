@@ -6,10 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HyperLogLog, MinHash, make_family
+from repro.core import CountMinSketch, HyperLogLog, MinHash, make_family
 from repro.core import independence as ind
 from repro.kernels import api
-from repro.kernels.plan import HashSpec, HLLSpec, MinHashSpec, SketchPlan
+from repro.kernels.plan import (CountMinSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
 
 key = jax.random.PRNGKey(0)
 text = b"recursive n-gram hashing is pairwise independent, at best"
@@ -58,13 +59,19 @@ print("\n=== 4. The production data-plane: one pass, every sketch ===")
 # pass (api.run) instead of one pass per sketch.
 mh = MinHash(k=16)
 mhp = mh.init(jax.random.PRNGKey(1))
+cms = CountMinSketch(depth=4, log2_width=12)
+cmsp = cms.init(jax.random.PRNGKey(2))
 plan = SketchPlan(hash=HashSpec(family="cyclic", n=8, L=32),
-                  sketches={"sig": MinHashSpec(k=16), "card": HLLSpec(b=10)})
+                  sketches={"sig": MinHashSpec(k=16), "card": HLLSpec(b=10),
+                            "freq": CountMinSpec(depth=4, log2_width=12)})
 out = api.run(plan, fam8._lookup(p8, big[None, :]),
-              operands={"sig": {"a": mhp["a"], "b": mhp["b"]}})
+              operands={"sig": {"a": mhp["a"], "b": mhp["b"]},
+                        "freq": {"a": cmsp["a"], "b": cmsp["b"]}})
 est_plan = float(hll.estimate(out["card"]))
+heavy = int(out["freq"].max())             # most counted column per CMS row
 print(f"plan {plan.hash.family}/n={plan.hash.n}: MinHash sig {out['sig'].shape}, "
-      f"HLL estimate {est_plan:,.0f} — one fused pass for both")
+      f"HLL estimate {est_plan:,.0f}, CMS heaviest cell {heavy} — one fused "
+      f"pass for all three")
 assert est_plan == est                     # same registers as the §3 pass
 gplan = SketchPlan(hash=HashSpec(family="general", n=8, L=32),
                    sketches={"sig": MinHashSpec(k=16)})
@@ -78,17 +85,18 @@ print(f"same plan, GENERAL family (p={hex(gplan.hash.p)}): "
 print("\n=== 5. Scaling out: the same plan over every device ===")
 # shard.run_sharded is api.run wrapped in shard_map over a 1-D data mesh:
 # signature rows are row-parallel, HLL registers merge with one pmax (max
-# IS the HLL merge), and ragged batches are padded with n_windows=0 rows —
-# so the outputs below are bit-identical to the single-device ones at any
-# device count.
+# IS the HLL merge), CountMin tables with one psum (counts are additive),
+# and ragged batches are padded with n_windows=0 rows — so the outputs
+# below are bit-identical to the single-device ones at any device count.
 from repro.kernels import shard
 
 docs = jnp.asarray(rng.integers(0, 256, size=(5, 4096)), jnp.uint32)  # ragged vs d
-sharded = shard.run_sharded(plan, fam8._lookup(p8, docs),
-                            operands={"sig": {"a": mhp["a"], "b": mhp["b"]}})
-single = api.run(plan, fam8._lookup(p8, docs),
-                 operands={"sig": {"a": mhp["a"], "b": mhp["b"]}})
+plan_ops = {"sig": {"a": mhp["a"], "b": mhp["b"]},
+            "freq": {"a": cmsp["a"], "b": cmsp["b"]}}
+sharded = shard.run_sharded(plan, fam8._lookup(p8, docs), operands=plan_ops)
+single = api.run(plan, fam8._lookup(p8, docs), operands=plan_ops)
 assert (sharded["sig"] == single["sig"]).all()
 assert (sharded["card"] == single["card"]).all()
+assert (sharded["freq"] == single["freq"]).all()   # one psum, same counts
 print(f"{len(jax.devices())} device(s), batch of {docs.shape[0]}: "
-      f"sharded sig/registers bit-identical to api.run")
+      f"sharded sig/registers/counts bit-identical to api.run")

@@ -123,10 +123,19 @@ class BandShardedLSHIndex:
 
     def close(self) -> None:
         """Release the probe thread pool (the index stays usable; a later
-        pooled probe recreates it)."""
+        pooled probe recreates it). Idempotent."""
         if self._pool is not None:
             self._pool.shutdown()
             self._pool = None
+
+    # long-running services leak the lazily-created pool if they rely on
+    # GC (ThreadPoolExecutor threads keep the interpreter referencing it);
+    # `with BandShardedLSHIndex(...)` scopes it deterministically
+    def __enter__(self) -> "BandShardedLSHIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def insert(self, doc_id: int, keys: Sequence[bytes]) -> None:
         """Register a kept document under its band keys (one per shard)."""
@@ -222,8 +231,14 @@ class MinHashDeduper:
     def close(self) -> None:
         """Release the index's probe thread pool (long-running services that
         build dedupers per corpus should call this; the deduper stays
-        usable)."""
+        usable). Idempotent."""
         self._index.close()
+
+    def __enter__(self) -> "MinHashDeduper":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- signing ------------------------------------------------------------
 

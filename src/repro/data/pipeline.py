@@ -52,13 +52,16 @@ class PackedCorpus:
         docs, dup_of = documents(spec)
         self.n_duplicates = 0
         if cfg.dedup:
-            dd = MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed,
+            # context-managed: the corpus-build deduper is transient, and
+            # its band-sharded index may hold a probe thread pool that
+            # nothing else would ever shut down
+            with MinHashDeduper(DedupConfig(vocab=cfg.vocab, seed=cfg.seed,
                                             family=cfg.hash_family,
                                             impl=cfg.impl,
-                                            data_shards=cfg.data_shards))
-            # one fused signing pass per shape bucket + vectorized LSH
-            # probing — not one device call per document
-            flags = dd.add_batch(docs)
+                                            data_shards=cfg.data_shards)) as dd:
+                # one fused signing pass per shape bucket + vectorized LSH
+                # probing — not one device call per document
+                flags = dd.add_batch(docs)
             self.n_duplicates = int(flags.sum())
             kept: List[np.ndarray] = [d for d, f in zip(docs, flags) if not f]
         else:
@@ -108,7 +111,7 @@ class DataPlane:
     def telemetry(self) -> Dict[str, float]:
         return {
             "distinct_ngrams": self.stats.distinct_ngrams(self.stats_state),
-            "tokens_seen": int(self.stats_state["tokens"]),
+            "tokens_seen": self.stats.token_count(self.stats_state),
             "docs_kept": self.corpus.n_docs_kept,
             "docs_deduped": self.corpus.n_duplicates,
         }

@@ -1,16 +1,24 @@
 """Streaming corpus telemetry — the paper's §2 application, productionized.
 
-Per training batch (on-device, jit): rolling CYCLIC hashes -> HyperLogLog
+Per training batch (on-device, jit): rolling hashes -> HyperLogLog
 distinct-n-gram registers + CountMin heavy-hitter counts. State is a small
 pytree that lives beside the train state and is checkpointed with it.
 
-The HLL leg routes through the fused hash->sketch engine: a one-HLL
-:class:`SketchPlan` is built once at construction and executed per batch
-with ``api.run`` — on TPU the register maxima are reduced in VMEM scratch
-inside the rolling-hash grid, so only the (m,) register file leaves the chip
-per batch. CountMin keeps the jnp scatter-add epilogue (XLA scatter has an
-add combiner; there is no efficient in-kernel histogram over a 2^16-wide
-table), fed by the same one-jit hash graph.
+Both sketch legs ride the fused hash->sketch engine in ONE pass: a
+two-sketch (HLL + CountMin) :class:`SketchPlan` is built once at
+construction and executed per batch with ``shard.run_auto`` — the rolling
+hash, the Theorem-1 discard, the register maxima AND the CountMin partial
+histogram all come from a single plan execution (one Pallas kernel on TPU;
+one jit graph on CPU), so the window-hash array is computed exactly once
+per batch and the per-batch outputs are just the (m,) register file and the
+(depth, width) count table. Sharded execution combines them with the
+sketches' own merge operators (``pmax`` / ``psum``) — bit-identical at any
+device count. :meth:`heavy_hitter_count` queries through the *same* plan
+hash graph, so query columns can never drift from update columns.
+
+The token counter accumulates as a uint32 (lo, hi) pair: a plain int32
+counter wraps negative at ~2.1B tokens — a few hours of production traffic
+— and jnp.int64 silently downcasts when x64 is off, so neither is safe.
 """
 from __future__ import annotations
 
@@ -21,9 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CountMinSketch, Cyclic, HyperLogLog, make_family
+from repro.core import CountMinSketch, HyperLogLog, make_family
 from repro.kernels import ops, shard
-from repro.kernels.plan import HashSpec, HLLSpec, SketchPlan
+from repro.kernels.plan import CountMinSpec, HashSpec, HLLSpec, SketchPlan
 
 
 @dataclasses.dataclass
@@ -35,11 +43,23 @@ class StatsConfig:
     cms_log2_width: int = 16
     vocab: int = 1 << 17
     seed: int = 11
+    family: str = "cyclic"       # rolling family: cyclic | general (fused);
+                                 # other paper families take the unfused path
     impl: str = "auto"           # kernel dispatch: auto | pallas | ref
-    # shard the per-batch HLL pass over this many devices (None = single
-    # device). HLL registers merge by elementwise max, so the sharded pass's
-    # single pmax combine is bit-identical to the unsharded register file.
+    # shard the per-batch sketch pass over this many devices (None = single
+    # device). HLL registers merge by elementwise max and CountMin counts
+    # add, so the sharded pass's single pmax + psum combine is bit-identical
+    # to the unsharded sketch states.
     data_shards: Optional[int] = None
+
+
+def _hash_spec(family: str, n: int, L: int) -> Optional[HashSpec]:
+    """Fused-engine HashSpec for the family, or None (unfused fallback)."""
+    if family == "cyclic":
+        return HashSpec(family="cyclic", n=n, L=L, discard=True)
+    if family == "general":
+        return HashSpec(family="general", n=n, L=L)
+    return None
 
 
 class NgramStats:
@@ -48,50 +68,78 @@ class NgramStats:
         self.mesh = mesh
         key = jax.random.PRNGKey(cfg.seed)
         kf, kc = jax.random.split(key)
-        self.fam = make_family("cyclic", n=cfg.ngram_n, L=cfg.L)
+        self.fam = make_family(cfg.family, n=cfg.ngram_n, L=cfg.L)
         self.fp = self.fam.init(kf, cfg.vocab)
         self.hll = HyperLogLog(b=cfg.hll_b,
                                hash_bits=self.fam.out_bits)
         self.cms = CountMinSketch(depth=cfg.cms_depth,
                                   log2_width=cfg.cms_log2_width)
         self._cms_params = self.cms.init(kc)
-        # the fused HLL plan, built ONCE (hoisted out of the per-batch
-        # update; it is the jit trace key)
-        self.plan = SketchPlan(
-            HashSpec(family="cyclic", n=cfg.ngram_n, L=cfg.L, discard=True),
-            (("hll", HLLSpec(b=cfg.hll_b)),))
-        # Theorem-1 consistency: the plan's post-discard width must be the
-        # hash_bits the HLL's rank extraction assumes, or the two legs of
-        # _update_impl would disagree on the usable-bit budget
-        assert self.plan.hash.out_bits == self.hll.hash_bits, (
-            self.plan.hash.out_bits, self.hll.hash_bits)
+        # the fused HLL+CMS plan, built ONCE (hoisted out of the per-batch
+        # update; it is the jit trace key). One plan execution per batch is
+        # the whole sketch data-plane.
+        hs = _hash_spec(cfg.family, cfg.ngram_n, cfg.L)
+        self.plan = None
+        if hs is not None:
+            self.plan = SketchPlan(
+                hs, (("hll", HLLSpec(b=cfg.hll_b)),
+                     ("cms", CountMinSpec(depth=cfg.cms_depth,
+                                          log2_width=cfg.cms_log2_width))))
+            # Theorem-1 consistency: the plan's post-discard width must be
+            # the hash_bits the HLL's rank extraction assumes, or the two
+            # sketches would disagree on the usable-bit budget
+            assert self.plan.hash.out_bits == self.hll.hash_bits, (
+                self.plan.hash.out_bits, self.hll.hash_bits)
         self._update = jax.jit(self._update_impl)
 
     def init_state(self) -> Dict:
+        # token counter: uint32 (lo, hi) pair — int32 wraps negative at
+        # ~2.1B tokens and int64 needs x64; the pair is exact to 2^64
         return {"hll": self.hll.init(), "cms": self._cms_params["table"],
-                "tokens": jnp.zeros((), jnp.int64 if jax.config.x64_enabled
-                                    else jnp.int32)}
+                "tokens": jnp.zeros((2,), jnp.uint32)}
+
+    @staticmethod
+    def _count_tokens(tokens_state: jnp.ndarray, added: int) -> jnp.ndarray:
+        """(lo, hi) uint32 pair + host-int batch size, with carry."""
+        lo0 = tokens_state[0]
+        lo = lo0 + np.uint32(added)
+        hi = tokens_state[1] + (lo < lo0).astype(jnp.uint32)
+        return jnp.stack([lo, hi])
+
+    @staticmethod
+    def token_count(state: Dict) -> int:
+        """Total tokens seen, as an exact Python int (safe past 2^32)."""
+        t = np.asarray(state["tokens"], np.uint32)
+        return (int(t[1]) << 32) | int(t[0])
+
+    def _unfused_hashes(self, tokens) -> jnp.ndarray:
+        """Fallback-family masked window hashes — the ONE definition shared
+        by update and query, so the two legs cannot drift."""
+        h = self.fam.hash_windows_batched(self.fp, tokens)
+        if hasattr(self.fam, "pairwise_bits"):
+            h = self.fam.pairwise_bits(h)
+        return h
 
     def _update_impl(self, state, tokens):
-        if isinstance(self.fam, Cyclic):
-            # fused path: hash + discard + register-max in one device pass;
-            # CMS reuses the same hash graph (XLA CSEs the shared rolling
-            # hash on the ref path; on TPU the HLL leg never materialises it)
+        if self.plan is not None:
+            # ONE fused pass: rolling hash + discard + HLL register max +
+            # CountMin histogram, all from the same plan execution
             h1v = self.fam._lookup(self.fp, tokens)
-            batch_regs = shard.run_auto(self.plan, h1v,
-                                        impl=self.cfg.impl, mesh=self.mesh,
-                                        data_shards=self.cfg.data_shards)["hll"]
-            hll_regs = self.hll.merge(state["hll"], batch_regs)
-            h = self.fam.pairwise_bits(
-                ops.cyclic(h1v, n=self.cfg.ngram_n, L=self.cfg.L,
-                           impl=self.cfg.impl)).reshape(-1)
+            out = shard.run_auto(
+                self.plan, h1v,
+                operands={"cms": {"a": self._cms_params["a"],
+                                  "b": self._cms_params["b"]}},
+                impl=self.cfg.impl, mesh=self.mesh,
+                data_shards=self.cfg.data_shards)
+            hll_regs = self.hll.merge(state["hll"], out["hll"])
+            cms_table = state["cms"] + out["cms"]
         else:
-            h = self.fam.pairwise_bits(
-                self.fam.hash_windows_batched(self.fp, tokens)).reshape(-1)
+            h = self._unfused_hashes(tokens).reshape(-1)
             hll_regs = self.hll.update(state["hll"], h)
-        cms = self.cms.add({**self._cms_params, "table": state["cms"]}, h)
-        return {"hll": hll_regs, "cms": cms["table"],
-                "tokens": state["tokens"] + tokens.size}
+            cms_table = self.cms.add(
+                {**self._cms_params, "table": state["cms"]}, h)["table"]
+        return {"hll": hll_regs, "cms": cms_table,
+                "tokens": self._count_tokens(state["tokens"], tokens.size)}
 
     def update(self, state: Dict, tokens: jnp.ndarray) -> Dict:
         return self._update(state, jnp.asarray(tokens, jnp.uint32))
@@ -99,9 +147,24 @@ class NgramStats:
     def distinct_ngrams(self, state: Dict) -> float:
         return float(self.hll.estimate(state["hll"]))
 
+    def query_hashes(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """(..., S) tokens -> (..., S-n+1) masked window hashes on the SAME
+        graph the fused update feeds to CountMin — the query side of the
+        sketch must remix bit-identical hashes or frequency estimates
+        silently corrupt (asserted in tests/test_data.py)."""
+        if self.plan is not None:
+            h1v = self.fam._lookup(self.fp, tokens)
+            hs = self.plan.hash
+            if hs.family == "cyclic":
+                h = ops.cyclic(h1v, n=hs.n, L=hs.L, impl=self.cfg.impl)
+            else:
+                h = ops.general(h1v, n=hs.n, p=hs.p, L=hs.L,
+                                impl=self.cfg.impl)
+            return h & np.uint32(hs.hash_mask)
+        return self._unfused_hashes(tokens)
+
     def heavy_hitter_count(self, state: Dict, tokens: np.ndarray) -> np.ndarray:
         """Estimated frequency of the first window of each given sequence."""
-        h = self.fam.pairwise_bits(
-            self.fam.hash_windows_batched(self.fp, jnp.asarray(tokens, jnp.uint32)))
+        h = self.query_hashes(jnp.asarray(tokens, jnp.uint32))
         return np.asarray(self.cms.query(
             {**self._cms_params, "table": state["cms"]}, h[..., 0]))

@@ -2,16 +2,17 @@
 itself) and their data-plane consumers.
 
 - plan.py          declarative SketchPlan: HashSpec (cyclic|general, n, L,
-                   discard, p) + named MinHash/HLL/Bloom sketch specs;
-                   frozen/hashable, i.e. jit static trace keys
+                   discard, p) + named MinHash/HLL/Bloom/CountMin sketch
+                   specs; frozen/hashable, i.e. jit static trace keys
 - api.py           the plan engine: api.run(plan, h1v, ...) executes every
                    requested sketch in ONE rolling-hash device pass; also
                    the shared validated prologue (flatten, impl dispatch,
                    S >= n check, n_windows normalization)
 - shard.py         multi-device plan execution: api.run wrapped in shard_map
                    over a 1-D data mesh (row-parallel MinHash/Bloom outputs,
-                   one pmax combine for HLL registers; bit-identical at any
-                   device count via n_windows=0 padding rows)
+                   one pmax combine for HLL registers, one psum for the
+                   CountMin table; bit-identical at any device count via
+                   n_windows=0 padding rows; Mesh cached per device set)
 - cyclic.py        rolling CYCLIC hash: direct-window + parallel-prefix modes
 - general.py       rolling GENERAL hash (clmul shift-reduce, trace-time consts)
 - sketch_fused.py  THE fused-kernel module: the plan kernel (family-generic

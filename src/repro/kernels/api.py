@@ -50,8 +50,8 @@ import numpy as np
 
 from repro.kernels import ref as _ref
 from repro.kernels import sketch_fused as _sf
-from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
-                                SketchPlan)
+from repro.kernels.plan import (BloomSpec, CountMinSpec, HashSpec, HLLSpec,
+                                MinHashSpec, SketchPlan)
 
 _IMPLS = ("auto", "pallas", "ref")
 
@@ -121,6 +121,12 @@ def _check_operands(plan: SketchPlan, operands) -> Dict[str, dict]:
                     f"sketch {name!r}: packed filter shape "
                     f"{got['bits'].shape} != ({spec.n_words},) for "
                     f"log2_m={spec.log2_m}")
+        elif isinstance(spec, CountMinSpec):
+            for op in ("a", "b"):
+                if got[op].shape != (spec.depth,):
+                    raise ValueError(
+                        f"sketch {name!r}: operand {op!r} shape "
+                        f"{got[op].shape} != (depth={spec.depth},)")
         operands[name] = got
     return operands
 
@@ -174,16 +180,16 @@ def execute(plan: SketchPlan, x, xb, nw, operands, ref_path: bool,
 def shape_outputs(plan: SketchPlan, out: Dict[str, jnp.ndarray],
                   lead) -> Dict[str, jnp.ndarray]:
     """Restore the caller's leading dims on per-row outputs (HLL registers
-    are corpus-level and pass through unchanged)."""
+    and CountMin tables are corpus-level and pass through unchanged)."""
     results = {}
     for name, spec in plan.sketches:
         o = out[name]
         if isinstance(spec, MinHashSpec):
             results[name] = o.reshape(lead + (spec.k,))
-        elif isinstance(spec, HLLSpec):
-            results[name] = o
-        else:
+        elif isinstance(spec, BloomSpec):
             results[name] = o.reshape(lead)
+        else:                        # HLL registers / CountMin partial table
+            results[name] = o
     return results
 
 
@@ -203,14 +209,17 @@ def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
         batches; ``None`` means every window of every row is valid.
       operands: ``{sketch_name: {operand_name: array}}`` runtime inputs —
         MinHash remix lanes ``a``/``b`` (k,), the packed Bloom filter
-        ``bits`` (2^log2_m/32,).
+        ``bits`` (2^log2_m/32,), the CountMin row remix constants
+        ``a``/``b`` (depth,).
       impl: ``"auto"`` (Pallas on TPU, jnp graph elsewhere), ``"pallas"``
         (force the kernel; interpret-mode off-TPU), ``"ref"`` (force jnp).
       **tile_kw: ``block_b`` / ``block_s`` overrides for the Pallas path.
 
     Returns:
       ``{sketch_name: result}`` — MinHash (..., k) uint32, HLL (2^b,) int32
-      (reduced over the whole batch), Bloom (...,) int32 hit counts.
+      (reduced over the whole batch), Bloom (...,) int32 hit counts,
+      CountMin (depth, 2^log2_width) int32 batch partial counts (additive:
+      fold into running state with ``+``).
     """
     x, xb, nw, operands, lead, ref_path = validate(
         plan, h1v, h1v_b, n_windows, operands, impl)

@@ -9,10 +9,11 @@ hash device pass feeding any number of sketch epilogues:
   ``p``. The spec owns the derived quantities the legacy entry points used
   to recompute per call: :attr:`HashSpec.out_bits` (usable bits) and
   :attr:`HashSpec.hash_mask` (the low-bit keep applied inline).
-* Sketch specs — :class:`MinHashSpec`, :class:`HLLSpec`, :class:`BloomSpec`
-  — pure shape/width declarations. Device operands (MinHash remix lanes,
-  the packed Bloom filter) are *runtime* inputs of :func:`repro.kernels.api.run`,
-  keyed by sketch name, so a plan stays a static, hashable trace key.
+* Sketch specs — :class:`MinHashSpec`, :class:`HLLSpec`, :class:`BloomSpec`,
+  :class:`CountMinSpec` — pure shape/width declarations. Device operands
+  (MinHash remix lanes, the packed Bloom filter, the CountMin row remix
+  constants) are *runtime* inputs of :func:`repro.kernels.api.run`, keyed by
+  sketch name, so a plan stays a static, hashable trace key.
 
 Plans are frozen dataclasses of ints/strings/tuples: hashable, comparable,
 and safe to use as ``jax.jit`` static arguments — one compiled executor per
@@ -153,8 +154,54 @@ class BloomSpec:
         return 1 << (self.log2_m - 5)
 
 
-SketchSpec = Union[MinHashSpec, HLLSpec, BloomSpec]
-_SPEC_TYPES = (MinHashSpec, HLLSpec, BloomSpec)
+@dataclasses.dataclass(frozen=True)
+class CountMinSpec:
+    """depth x 2^log2_width CountMin histogram; needs runtime operands
+    ``a``/``b`` (depth,) — the per-row affine remix constants (odd ``a``).
+
+    Counts are additive: the engine returns the *batch partial table*
+    (depth, width) int32, which merges into running state by ``+`` and
+    combines across data shards with one ``psum`` (the CMS merge operator),
+    exactly as HLL registers combine with one ``pmax``.
+
+    ``in_kernel_max_log2_width`` records the in-kernel vs scatter-add
+    threshold on the plan itself (static, part of the jit trace key, so the
+    ref and Pallas executors agree on the decision): tables up to
+    2^threshold wide are accumulated as depth-major one-hot partial sums in
+    VMEM scratch inside the fused grid; wider tables (the production 2^16)
+    fall back to an XLA scatter-add over kernel-emitted window hashes
+    inside the same single-jit graph.
+    """
+
+    depth: int = 4
+    log2_width: int = 16
+    in_kernel_max_log2_width: int = 12
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"CountMin depth must be >= 1, got {self.depth}")
+        if not 1 <= self.log2_width <= 30:
+            raise ValueError(
+                f"CountMin log2_width must be in [1, 30], got {self.log2_width}")
+        if self.in_kernel_max_log2_width < 0:
+            raise ValueError("in_kernel_max_log2_width must be >= 0")
+
+    operand_names: Tuple[str, ...] = dataclasses.field(
+        default=("a", "b"), init=False, repr=False, compare=False)
+
+    @property
+    def width(self) -> int:
+        return 1 << self.log2_width
+
+    @property
+    def use_in_kernel(self) -> bool:
+        """True when the Pallas path histograms in VMEM scratch; False when
+        it emits window hashes for the XLA scatter-add epilogue."""
+        return self.log2_width <= self.in_kernel_max_log2_width
+
+
+SketchSpec = Union[MinHashSpec, HLLSpec, BloomSpec, CountMinSpec]
+_SPEC_TYPES = (MinHashSpec, HLLSpec, BloomSpec, CountMinSpec)
 
 
 @dataclasses.dataclass(frozen=True)

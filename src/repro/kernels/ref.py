@@ -135,6 +135,27 @@ def _hll_reduce(h, valid, b: int, rank_bits: int) -> jnp.ndarray:
     return jnp.zeros((m,), jnp.int32).at[idx].max(rank)
 
 
+def cms_reduce(h, valid, a, b, log2_width: int) -> jnp.ndarray:
+    """(B, W) masked hashes -> (depth, 2^log2_width) int32 partial counts.
+
+    Row d's column is the top ``log2_width`` bits of the affine remix
+    ``a[d]*h + b[d]`` (mod 2^32) — bit-identical to
+    ``repro.core.CountMinSketch._cols`` — and invalid (padded) windows add
+    0. Integer scatter-add is exact and order-free, so this is also the
+    Pallas fallback epilogue for tables too wide for VMEM scratch.
+    """
+    hf = h.astype(_U32).reshape(-1)
+    vf = valid.reshape(-1).astype(jnp.int32)
+    depth = a.shape[0]
+    mixed = a[:, None] * hf[None, :] + b[:, None]
+    cols = (mixed >> np.uint32(32 - log2_width)).astype(jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(depth, dtype=jnp.int32)[:, None],
+                            cols.shape)
+    table = jnp.zeros((depth, 1 << log2_width), jnp.int32)
+    return table.at[rows, cols].add(
+        jnp.broadcast_to(vf[None, :], cols.shape))
+
+
 def _bloom_reduce(ha, hb, valid, bits, k: int, log2_m: int) -> jnp.ndarray:
     """Two (B, W) masked hash draws + packed filter -> (B,) hit counts."""
     hb = hb | np.uint32(1)                       # odd probe stride
@@ -178,7 +199,8 @@ def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands) -> dict:
     wraps it in one jit per plan so the whole multi-sketch graph is a
     single device dispatch on the CPU path.
     """
-    from repro.kernels.plan import BloomSpec, HLLSpec, MinHashSpec
+    from repro.kernels.plan import (BloomSpec, CountMinSpec, HLLSpec,
+                                    MinHashSpec)
 
     hs = plan.hash
     h, valid = _masked_windows(h1v, hs.n, hs.L, hs.hash_mask, n_windows,
@@ -198,6 +220,9 @@ def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands) -> dict:
         elif isinstance(spec, BloomSpec):
             out[name] = _bloom_reduce(h, hb, valid, ops_nm["bits"],
                                       spec.k, spec.log2_m)
+        elif isinstance(spec, CountMinSpec):
+            out[name] = cms_reduce(h, valid, ops_nm["a"], ops_nm["b"],
+                                   spec.log2_width)
         else:  # pragma: no cover - SketchPlan validates spec types
             raise TypeError(f"unknown sketch spec {type(spec)}")
     return out

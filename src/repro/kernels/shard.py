@@ -9,11 +9,14 @@ combine step — so :func:`run_sharded` is just :func:`repro.kernels.api.run`
 wrapped in ``shard_map`` over the batch dimension of a 1-D ``data`` mesh:
 
 * the (B, S) h1v batch (and the second Bloom stream) is row-sharded,
-* sketch operands (MinHash remix lanes, the packed Bloom filter) are
-  replicated,
+* sketch operands (MinHash remix lanes, the packed Bloom filter, the
+  CountMin row constants) are replicated,
 * MinHash signatures and Bloom counts come back row-sharded (no combine),
 * the HLL register file gets a single ``pmax`` over the mesh axis — the
-  sketch's own merge operator, so the combine is exact, not approximate.
+  sketch's own merge operator, so the combine is exact, not approximate,
+* the CountMin partial table gets a single ``psum`` — counts are additive,
+  and integer addition re-brackets exactly, so the sharded table is
+  bit-identical too.
 
 Bit-identical outputs at any device count: a batch that does not divide the
 shard count is padded with rows whose ``n_windows`` is 0 — the same masking
@@ -41,20 +44,34 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import api
-from repro.kernels.plan import HLLSpec, SketchPlan
+from repro.kernels.plan import CountMinSpec, HLLSpec, SketchPlan
 
 AXIS = "data"
 
 
+@functools.lru_cache(maxsize=None)
+def _cached_mesh(devices: tuple, d: int) -> Mesh:
+    return Mesh(np.array(devices[:d]), (AXIS,))
+
+
 def data_mesh(data_shards: Optional[int] = None) -> Mesh:
-    """A 1-D mesh over the first ``data_shards`` devices (default: all)."""
+    """A 1-D mesh over the first ``data_shards`` devices (default: all).
+
+    The Mesh is cached per (device-tuple, shard-count): ``mesh`` is a
+    static argument of the jit'd ``_run_sharded`` executor, and per-batch
+    ``run_auto(..., data_shards=...)`` service calls construct their mesh
+    here every step. Current JAX interns ``Mesh`` by value, which already
+    makes equal meshes one object — the explicit cache makes the
+    one-compile property independent of that implementation detail (it is
+    asserted directly in ``tests/test_shard.py``).
+    """
     devs = jax.devices()
     d = len(devs) if data_shards is None else int(data_shards)
     if not 1 <= d <= len(devs):
         raise ValueError(
             f"data_shards={data_shards} not in [1, {len(devs)}] "
             f"(available devices: {len(devs)})")
-    return Mesh(np.array(devs[:d]), (AXIS,))
+    return _cached_mesh(tuple(devs), d)
 
 
 def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
@@ -74,10 +91,16 @@ def _run_sharded(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
                 # the HLL merge operator IS elementwise max, so one pmax
                 # over the mesh axis reproduces the global register file
                 out[name] = jax.lax.pmax(out[name], AXIS)
+            elif isinstance(spec, CountMinSpec):
+                # CountMin counts merge additively, so one psum over the
+                # mesh axis reproduces the global partial table exactly
+                # (integer add is associative/commutative: bit-identical)
+                out[name] = jax.lax.psum(out[name], AXIS)
         return out
 
     row = P(AXIS)
-    out_specs = {name: P() if isinstance(spec, HLLSpec) else row
+    corpus_level = (HLLSpec, CountMinSpec)
+    out_specs = {name: P() if isinstance(spec, corpus_level) else row
                  for name, spec in plan.sketches}
     op_specs = jax.tree_util.tree_map(lambda _: P(), operands)
     return shard_map(
@@ -125,7 +148,8 @@ def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
         nw = jnp.pad(nw, (0, pad))
     tile = tuple(sorted(tile_kw.items()))
     out = _run_sharded(plan, mesh, ref_path, tile, x, xb, nw, operands)
-    out = {name: (out[name] if isinstance(spec, HLLSpec) else out[name][:B])
+    out = {name: (out[name] if isinstance(spec, (HLLSpec, CountMinSpec))
+                  else out[name][:B])
            for name, spec in plan.sketches}
     return api.shape_outputs(plan, out, lead)
 

@@ -53,6 +53,16 @@ scratch). The HLL epilogue still materialises a ``(block_b*block_s, m)``
 one-hot tile, so its cap scales with ``m``; both budgets are enforced by
 ``_resolve_block_s`` against a ~4 MB tile target.
 
+The CountMin epilogue is two-mode, the decision recorded statically on
+:class:`~repro.kernels.plan.CountMinSpec` (``use_in_kernel``): tables up to
+``2^in_kernel_max_log2_width`` columns accumulate depth-major one-hot
+partial sums in a ``(depth, width)`` VMEM scratch (the one-hot walk is
+row-chunked to ``_CMS_ROW_TILE`` so its live tile never exceeds ~4 MB);
+wider tables — XLA's scatter-add handles the production 2^16 better than
+any VMEM-resident histogram — make the kernel emit its masked window-hash
+tiles instead, and ``cms_reduce`` scatter-adds them *inside the same jit
+graph* (the one plan output that round-trips hashes through HBM).
+
 The legacy single-sketch entry points (``cyclic_minhash_fused`` /
 ``cyclic_hll_fused`` / ``cyclic_bloom_fused``) are thin wrappers that build
 a one-sketch plan — one implementation, bit-identical by construction.
@@ -73,10 +83,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref as _kref
 from repro.kernels.cyclic import _rotl_const
 from repro.kernels.general import _mul_const, _xpows_host
-from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
-                                SketchPlan)
+from repro.kernels.plan import (BloomSpec, CountMinSpec, HashSpec, HLLSpec,
+                                MinHashSpec, SketchPlan)
 
 _U32 = jnp.uint32
 _SENTINEL = np.uint32(0xFFFFFFFF)
@@ -87,9 +98,16 @@ _SENTINEL = np.uint32(0xFFFFFFFF)
 # plans on the exact pre-lane-tiling computation (one chunk).
 _MINHASH_LANE_TILE = 16
 
+# CountMin one-hot row-tile: the in-kernel histogram walks the tile's
+# flattened windows in chunks of this many rows, so its live one-hot tile
+# is (_CMS_ROW_TILE, width) regardless of block_b/block_s — 4 MB at the
+# spec's default in-kernel ceiling of 2^12 columns.
+_CMS_ROW_TILE = 256
+
 # per-sketch default sequence tiles (a multi-sketch plan takes the min);
 # the lane-tiled remix admits a 1024-wide MinHash tile even at k=64
-_BLOCK_S_DEFAULTS = {MinHashSpec: 1024, HLLSpec: 256, BloomSpec: 1024}
+_BLOCK_S_DEFAULTS = {MinHashSpec: 1024, HLLSpec: 256, BloomSpec: 1024,
+                     CountMinSpec: 512}
 
 
 def _tile_window_hashes(x, halo_src, *, hs: HashSpec, block_s: int):
@@ -180,6 +198,39 @@ def _hll_tile(h, valid, b: int, rank_bits: int, o_ref, acc_ref, bi, j):
         o_ref[...] = acc_ref[...]
 
 
+def _cms_tile(h, valid, a_ref, b_ref, log2_width: int, o_ref, acc_ref, bi, j):
+    """Depth-major in-kernel CountMin histogram: row d's partial counts are
+    a one-hot accumulation of the tile's remixed column indices, chunked
+    into ``_CMS_ROW_TILE``-row one-hot tiles so the live VMEM tile is
+    (row_tile, width) regardless of block_b/block_s. Counts are additive,
+    so the (depth, width) scratch reduces across the WHOLE grid (batch
+    blocks too, like HLL): init at the very first grid step, flush at the
+    very last. Invalid (padded) windows add 0."""
+    @pl.when((bi == 0) & (j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hf = h.reshape(-1)
+    vf = valid.reshape(-1).astype(jnp.int32)
+    width = 1 << log2_width
+    shift = np.uint32(32 - log2_width)
+    a, b = a_ref[...], b_ref[...]
+    for d in range(a.shape[0]):
+        cols = ((a[d] * hf + b[d]) >> shift).astype(jnp.int32)
+        partial = jnp.zeros((width,), jnp.int32)
+        for s in range(0, cols.shape[0], _CMS_ROW_TILE):
+            cc = cols[s : s + _CMS_ROW_TILE]
+            onehot = (cc[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (cc.shape[0], width), 1))
+            partial = partial + jnp.sum(
+                jnp.where(onehot, vf[s : s + _CMS_ROW_TILE, None], 0), axis=0)
+        acc_ref[d, :] = acc_ref[d, :] + partial
+
+    @pl.when((bi == pl.num_programs(0) - 1) & (j == pl.num_programs(1) - 1))
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
 def _bloom_tile(h, hb, valid, bits_ref, k: int, log2_m: int, o_ref, acc_ref, j):
     @pl.when(j == 0)
     def _init():
@@ -250,6 +301,15 @@ def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
         elif isinstance(spec, HLLSpec):
             _hll_tile(h, valid, spec.b, spec.resolve_rank_bits(hs), o_ref,
                       acc_ref, bi, j)
+        elif isinstance(spec, CountMinSpec):
+            if spec.use_in_kernel:
+                _cms_tile(h, valid, oprs[0], oprs[1], spec.log2_width,
+                          o_ref, acc_ref, bi, j)
+            else:
+                # table too wide for VMEM scratch: emit the tile's masked
+                # window hashes; the XLA scatter-add epilogue (same jit
+                # graph, see sketch_plan_fused) builds the histogram
+                o_ref[...] = h
         else:
             _bloom_tile(h, hb, valid, oprs[0], spec.k, spec.log2_m, o_ref,
                         acc_ref, j)
@@ -298,7 +358,10 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
     h1v (B, S) uint32, h1v_b (B, S) or None (required iff the plan holds a
     BloomSpec), n_windows (B,) int32, operands {sketch_name: {operand:
     array}} -> {sketch_name: result} with MinHash (B, k) uint32, HLL (2^b,)
-    int32 (reduced over the whole batch), Bloom (B,) int32 hit counts.
+    int32 (reduced over the whole batch), Bloom (B,) int32 hit counts,
+    CountMin (depth, 2^log2_width) int32 batch partial counts (in VMEM
+    scratch up to the spec's ``in_kernel_max_log2_width``; wider tables are
+    scatter-added from kernel-emitted hashes in the same jit graph).
     """
     assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
     B, S = h1v.shape
@@ -344,6 +407,25 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
             out_specs.append(flat(m))
             out_shapes.append(jax.ShapeDtypeStruct((m,), jnp.int32))
             scratches.append(pltpu.VMEM((m,), jnp.int32))
+        elif isinstance(spec, CountMinSpec):
+            in_specs += [flat(spec.depth), flat(spec.depth)]
+            inputs += [ops_nm["a"].astype(_U32), ops_nm["b"].astype(_U32)]
+            if spec.use_in_kernel:
+                out_specs.append(pl.BlockSpec(
+                    (spec.depth, spec.width), lambda bi, j: (0, 0),
+                    memory_space=pltpu.VMEM))
+                out_shapes.append(
+                    jax.ShapeDtypeStruct((spec.depth, spec.width), jnp.int32))
+                scratches.append(pltpu.VMEM((spec.depth, spec.width),
+                                            jnp.int32))
+            else:
+                # scatter fallback: the kernel emits its masked window-hash
+                # tiles (the one sketch output that is NOT a reduction);
+                # the histogram is built by cms_reduce below, in the same
+                # jit graph. Scratch is a dummy — nothing accumulates.
+                out_specs.append(tile)
+                out_shapes.append(jax.ShapeDtypeStruct((Bp, Sp), _U32))
+                scratches.append(pltpu.VMEM((1, 1), jnp.int32))
         else:
             # full filter resident per grid step
             in_specs.append(flat(spec.n_words))
@@ -368,6 +450,19 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
             results[name] = o[:B]
         elif isinstance(spec, HLLSpec):
             results[name] = o
+        elif isinstance(spec, CountMinSpec):
+            if spec.use_in_kernel:
+                results[name] = o
+            else:
+                # XLA scatter-add over the kernel-emitted hashes; validity
+                # re-derived from the padded n_windows exactly as in-kernel
+                # (padded rows have nw=0, out-of-range columns are >= nw)
+                ops_nm = operands.get(name, {}) if operands else {}
+                idx = jnp.arange(Sp, dtype=jnp.int32)
+                valid = idx[None, :] < nw
+                results[name] = _kref.cms_reduce(
+                    o, valid, ops_nm["a"].astype(_U32),
+                    ops_nm["b"].astype(_U32), spec.log2_width)
         else:
             results[name] = o[:B, 0]
     return results

@@ -1,0 +1,17 @@
+"""Shared jaxpr introspection helpers for the parity test suites."""
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` in ``jaxpr``, recursing into
+    nested jaxprs (pjit bodies, shard_map, custom calls)."""
+    cnt = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            cnt += 1
+        for v in eqn.params.values():
+            for u in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(u, "jaxpr"):
+                    cnt += count_primitive(u.jaxpr, name)
+                elif hasattr(u, "eqns"):
+                    cnt += count_primitive(u, name)
+    return cnt

@@ -1,0 +1,190 @@
+"""CountMin in the plan engine (the PR-4 gap-closing sketch).
+
+Acceptance, all bit-exact:
+* a CountMin plan equals the core ``CountMinSketch.add`` oracle applied to
+  the masked valid window hashes — ref and Pallas-interpret executors, both
+  hash families, padded ``n_windows`` batches, and BOTH epilogue modes
+  (in-kernel VMEM histogram and the XLA scatter-add fallback, forced via
+  ``in_kernel_max_log2_width``);
+* the threshold is recorded statically on the spec (``use_in_kernel``) and
+  flipping it never changes a single count;
+* a multi-sketch plan containing CountMin is still ONE ``pallas_call`` in
+  the fused jaxpr — in fallback mode too (the scatter rides the same jit);
+* ``run_sharded`` combines the table with exactly one ``psum`` and is
+  bit-identical to ``api.run`` at 1/2/4/8 virtual devices, ragged batches
+  included;
+* operand/spec validation raises the engine's consistent errors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CountMinSketch
+from repro.kernels import api, ref, shard
+from repro.kernels.plan import (CountMinSpec, HashSpec, HLLSpec, MinHashSpec,
+                                SketchPlan)
+from repro.kernels.sketch_fused import sketch_plan_fused
+from _jaxpr_utils import count_primitive as _count_primitive
+
+N_DEV = len(jax.devices())
+DEPTH = 4
+
+
+def _h1v(shape, seed=0):
+    return jax.random.bits(jax.random.PRNGKey(seed), shape, dtype=jnp.uint32)
+
+
+def _cms_params(seed=1):
+    return CountMinSketch(depth=DEPTH, log2_width=10).init(
+        jax.random.PRNGKey(seed))
+
+
+def _oracle(x, nw, plan, params, log2_width):
+    """Core CountMinSketch.add over the masked valid window hashes."""
+    hs = plan.hash
+    h = np.asarray(ref.window_hashes_ref(
+        x, family=hs.family, n=hs.n, L=hs.L, p=hs.p) & np.uint32(hs.hash_mask))
+    if nw is None:
+        valid = np.concatenate([row for row in h])
+    else:
+        valid = np.concatenate(
+            [h[i, : int(nw[i])] for i in range(h.shape[0])])
+    cms = CountMinSketch(depth=DEPTH, log2_width=log2_width)
+    out = cms.add({"a": params["a"], "b": params["b"],
+                   "table": jnp.zeros((DEPTH, 1 << log2_width), jnp.int32)},
+                  jnp.asarray(valid))
+    return np.asarray(out["table"])
+
+
+IMPLS = [("ref", {}), ("pallas", dict(block_b=2, block_s=256))]
+
+
+@pytest.mark.parametrize("family", ["cyclic", "general"])
+@pytest.mark.parametrize("impl,tile", IMPLS)
+@pytest.mark.parametrize("log2_width,threshold", [
+    (10, 12),   # in-kernel VMEM histogram
+    (10, 0),    # same width, scatter fallback forced: counts must not move
+    (14, 12),   # wide table: fallback by default
+])
+@pytest.mark.parametrize("padded", [False, True])
+def test_cms_plan_matches_core_oracle(family, impl, tile, log2_width,
+                                      threshold, padded):
+    B, S = 5, 300
+    x = _h1v((B, S), seed=log2_width)
+    p = _cms_params()
+    nw = None
+    if padded:
+        nw = jnp.asarray([1, 100, 293, 7, 0], jnp.int32)
+    spec = CountMinSpec(depth=DEPTH, log2_width=log2_width,
+                        in_kernel_max_log2_width=threshold)
+    assert spec.use_in_kernel == (log2_width <= threshold)
+    plan = SketchPlan(HashSpec(family=family, n=8),
+                      (("freq", spec),))
+    got = api.run(plan, x, n_windows=nw,
+                  operands={"freq": {"a": p["a"], "b": p["b"]}},
+                  impl=impl, **tile)["freq"]
+    want = _oracle(x, nw, plan, p, log2_width)
+    assert got.dtype == jnp.int32 and got.shape == (DEPTH, 1 << log2_width)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("impl,tile", IMPLS)
+def test_cms_multi_sketch_single_pass(impl, tile):
+    # CountMin rides the same single pass as MinHash + HLL, and equals its
+    # own single-sketch plan bit-for-bit
+    from repro.core import MinHash
+    x = _h1v((4, 500), seed=9)
+    mh = MinHash(k=16).init(jax.random.PRNGKey(2))
+    p = _cms_params()
+    hs = HashSpec(family="cyclic", n=8)
+    multi = SketchPlan(hs, (("sig", MinHashSpec(k=16)),
+                            ("card", HLLSpec(b=4)),
+                            ("freq", CountMinSpec(depth=DEPTH, log2_width=10))))
+    got = api.run(multi, x,
+                  operands={"sig": {"a": mh["a"], "b": mh["b"]},
+                            "freq": {"a": p["a"], "b": p["b"]}},
+                  impl=impl, **tile)
+    single = api.run(SketchPlan(hs, (("freq", CountMinSpec(depth=DEPTH,
+                                                           log2_width=10)),)),
+                     x, operands={"freq": {"a": p["a"], "b": p["b"]}},
+                     impl=impl, **tile)["freq"]
+    np.testing.assert_array_equal(np.asarray(got["freq"]), np.asarray(single))
+    np.testing.assert_array_equal(
+        np.asarray(got["sig"]),
+        np.asarray(api.run(SketchPlan(hs, (("sig", MinHashSpec(k=16)),)), x,
+                           operands={"sig": {"a": mh["a"], "b": mh["b"]}},
+                           impl=impl, **tile)["sig"]))
+
+
+@pytest.mark.parametrize("threshold", [12, 0])
+def test_cms_plan_is_one_pallas_call(threshold):
+    # in-kernel AND fallback: one pallas_call; the fallback's scatter-add
+    # lives in the same jit graph, after the kernel
+    p = _cms_params()
+    plan = SketchPlan(
+        HashSpec(family="cyclic", n=8),
+        (("freq", CountMinSpec(depth=DEPTH, log2_width=10,
+                               in_kernel_max_log2_width=threshold)),
+         ("card", HLLSpec(b=4))))
+
+    def fn(x, nw, a, b):
+        return sketch_plan_fused(x, None, nw, {"freq": {"a": a, "b": b}},
+                                 plan=plan, block_b=2, block_s=256,
+                                 interpret=True)
+
+    jaxpr = jax.make_jaxpr(fn)(_h1v((3, 300)), jnp.full((3,), 293, jnp.int32),
+                               p["a"], p["b"])
+    assert _count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+
+@pytest.mark.parametrize("d", [pytest.param(
+    d, marks=pytest.mark.skipif(d > N_DEV, reason=f"needs {d} devices"))
+    for d in (1, 2, 4, 8)])
+@pytest.mark.parametrize("B", [1, 5, 8])
+def test_cms_sharded_bit_identical(d, B):
+    p = _cms_params()
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("freq", CountMinSpec(depth=DEPTH, log2_width=10)),))
+    x = _h1v((B, 300), seed=3 * B)
+    nw = jnp.asarray(
+        np.random.default_rng(B).integers(1, 294, size=B), jnp.int32)
+    ops = {"freq": {"a": p["a"], "b": p["b"]}}
+    want = api.run(plan, x, n_windows=nw, operands=ops)
+    got = shard.run_sharded(plan, x, n_windows=nw, operands=ops,
+                            data_shards=d)
+    np.testing.assert_array_equal(np.asarray(got["freq"]),
+                                  np.asarray(want["freq"]))
+
+
+def test_cms_combine_is_single_psum():
+    d = min(2, N_DEV)
+    p = _cms_params()
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("freq", CountMinSpec(depth=DEPTH, log2_width=10)),))
+
+    def fn(x):
+        return shard.run_sharded(
+            plan, x, operands={"freq": {"a": p["a"], "b": p["b"]}},
+            data_shards=d)["freq"]
+
+    jaxpr = jax.make_jaxpr(fn)(_h1v((4, 128)))
+    assert _count_primitive(jaxpr.jaxpr, "psum") == 1
+    assert _count_primitive(jaxpr.jaxpr, "pmax") == 0
+
+
+def test_cms_spec_and_operand_validation():
+    with pytest.raises(ValueError, match="depth must be >= 1"):
+        CountMinSpec(depth=0)
+    with pytest.raises(ValueError, match="log2_width must be in"):
+        CountMinSpec(log2_width=31)
+    with pytest.raises(ValueError, match="in_kernel_max_log2_width"):
+        CountMinSpec(in_kernel_max_log2_width=-1)
+    x = _h1v((2, 64))
+    p = _cms_params()
+    plan = SketchPlan(HashSpec(n=8),
+                      (("freq", CountMinSpec(depth=DEPTH, log2_width=10)),))
+    with pytest.raises(ValueError, match="needs operands"):
+        api.run(plan, x)
+    with pytest.raises(ValueError, match=r"shape \(2,\) != \(depth=4,\)"):
+        api.run(plan, x, operands={"freq": {"a": p["a"][:2], "b": p["b"][:2]}})

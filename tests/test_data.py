@@ -80,6 +80,90 @@ def test_ngram_stats_hll_accuracy():
     assert abs(est - truth) / truth < 0.12, (est, truth)
 
 
+def test_ngram_stats_token_counter_survives_int32_wrap():
+    # regression: the counter was int32 when x64 is off — a production
+    # corpus wraps it negative at ~2.1B tokens. The uint32 (lo, hi) pair
+    # must carry across the 2^32 boundary exactly.
+    import jax.numpy as jnp
+    st = NgramStats(StatsConfig(vocab=1 << 12, cms_log2_width=8))
+    state = st.init_state()
+    assert st.token_count(state) == 0
+    batch = np.random.default_rng(0).integers(
+        0, 1 << 12, size=(4, 64)).astype(np.uint32)
+    state["tokens"] = jnp.asarray([2**32 - 100, 3], jnp.uint32)
+    before = st.token_count(state)
+    state = st.update(state, batch)              # +256 crosses the wrap
+    got = st.token_count(state)
+    assert got == before + batch.size
+    assert got > 2**33                           # positive, past int32/int64-lo
+    state = st.update(state, batch)              # and keeps counting after
+    assert st.token_count(state) == got + batch.size
+
+
+@pytest.mark.parametrize("family", ["cyclic", "general", "threewise"])
+def test_stats_query_hashes_match_update_path(family):
+    # bit-parity between heavy_hitter_count's query hashes and the hashes
+    # the update feeds CountMin: a drift would silently corrupt every
+    # frequency estimate (the two legs used different graphs before PR 4).
+    # "threewise" exercises the unfused fallback leg (plan is None).
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    st = NgramStats(StatsConfig(family=family, vocab=1 << 12,
+                                cms_log2_width=10))
+    toks = np.random.default_rng(1).integers(
+        0, 1 << 12, size=(3, 96)).astype(np.uint32)
+    if st.plan is not None:
+        hs = st.plan.hash
+        h1v = st.fam._lookup(st.fp, jnp.asarray(toks, jnp.uint32))
+        want = np.asarray(ref.window_hashes_ref(
+            h1v, family=hs.family, n=hs.n, L=hs.L, p=hs.p)
+            & np.uint32(hs.hash_mask))
+        np.testing.assert_array_equal(np.asarray(st.query_hashes(toks)), want)
+    else:
+        assert family == "threewise"
+    # end-to-end: after updating with exactly one window, querying that
+    # window reads back its own count — impossible unless every hash bit
+    # and every CMS column matched between the two legs
+    state = st.init_state()
+    one = toks[:1, : st.cfg.ngram_n]
+    state = st.update(state, one)
+    assert int(st.heavy_hitter_count(state, one)[0]) == 1
+
+
+@pytest.mark.parametrize("family", ["cyclic", "general"])
+def test_stats_update_is_one_rolling_hash_pass(family):
+    # the fused update is ONE device pass: exactly one pallas_call in the
+    # jaxpr (the old code ran a second, duplicated rolling-hash graph for
+    # the CMS leg)
+    import jax
+    import jax.numpy as jnp
+    from _jaxpr_utils import count_primitive
+
+    st = NgramStats(StatsConfig(family=family, vocab=1 << 12,
+                                cms_log2_width=10, impl="pallas"))
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        0, 1 << 12, size=(4, 128)), jnp.uint32)
+    jaxpr = jax.make_jaxpr(st._update_impl)(st.init_state(), toks)
+    assert count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+
+def test_deduper_context_manager_closes_probe_pool():
+    rng = np.random.default_rng(3)
+    docs = [rng.integers(0, 4096, size=int(s)).astype(np.int32)
+            for s in rng.integers(40, 120, size=16)]
+    with MinHashDeduper(DedupConfig(vocab=4096, lsh_workers=4)) as dd:
+        dd.add_batch(docs)
+        pool = dd._index._pool
+        assert pool is not None            # the lazy pool really existed
+    assert dd._index._pool is None         # __exit__ released it
+    assert pool._shutdown                  # and the executor is shut down
+    dd.close()                             # idempotent
+    # the index stays usable after close (pool recreated on demand)
+    flags = dd.add_batch(docs)
+    assert flags.all()                     # same docs -> all duplicates now
+    dd.close()
+
+
 def test_pipeline_deterministic_resume():
     cfg = PipelineConfig(seq_len=128, batch_size=4, dedup=False, seed=9)
     dp1 = DataPlane(cfg)

@@ -21,6 +21,7 @@ from repro.kernels import api, ops, ref
 from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
                                 SketchPlan)
 from repro.kernels.sketch_fused import sketch_plan_fused
+from _jaxpr_utils import count_primitive as _count_primitive
 
 KEY = jax.random.PRNGKey(0)
 
@@ -169,20 +170,6 @@ def test_general_ref_equals_pallas_padded():
 # ---------------------------------------------------------------------------
 # one device pass: exactly one pallas_call in the fused jaxpr
 # ---------------------------------------------------------------------------
-
-
-def _count_primitive(jaxpr, name):
-    cnt = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            cnt += 1
-        for v in eqn.params.values():
-            for u in (v if isinstance(v, (list, tuple)) else [v]):
-                if hasattr(u, "jaxpr"):
-                    cnt += _count_primitive(u.jaxpr, name)
-                elif hasattr(u, "eqns"):
-                    cnt += _count_primitive(u, name)
-    return cnt
 
 
 @pytest.mark.parametrize("family", ["cyclic", "general"])

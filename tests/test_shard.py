@@ -20,10 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MinHash
+from repro.core import CountMinSketch, MinHash
 from repro.kernels import api, shard
-from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
-                                SketchPlan)
+from repro.kernels.plan import (BloomSpec, CountMinSpec, HashSpec, HLLSpec,
+                                MinHashSpec, SketchPlan)
+from _jaxpr_utils import count_primitive as _count_primitive
 
 N_DEV = len(jax.devices())
 
@@ -41,22 +42,26 @@ def _plan(family, n=8):
     return SketchPlan(
         HashSpec(family=family, n=n, L=32),
         (("sig", MinHashSpec(k=32)), ("card", HLLSpec(b=4)),
-         ("dec", BloomSpec(k=3, log2_m=14))))
+         ("dec", BloomSpec(k=3, log2_m=14)),
+         ("freq", CountMinSpec(depth=3, log2_width=8))))
 
 
 def _inputs(B, S=300, seed=0):
     p = MinHash(k=32).init(jax.random.PRNGKey(seed + 1))
+    cp = CountMinSketch(depth=3, log2_width=8).init(
+        jax.random.PRNGKey(seed + 2))
     return dict(
         x=_h1v((B, S), seed=seed), xb=_h1v((B, S), seed=seed + 50),
         nw=jnp.asarray(
             np.random.default_rng(seed).integers(1, S - 8 + 2, size=B),
             jnp.int32),
         operands={"sig": {"a": p["a"], "b": p["b"]},
-                  "dec": {"bits": _h1v((1 << 9,), seed=seed + 99)}})
+                  "dec": {"bits": _h1v((1 << 9,), seed=seed + 99)},
+                  "freq": {"a": cp["a"], "b": cp["b"]}})
 
 
 def _assert_same(got, want):
-    for name in ("sig", "card", "dec"):
+    for name in ("sig", "card", "dec", "freq"):
         np.testing.assert_array_equal(np.asarray(got[name]),
                                       np.asarray(want[name]))
 
@@ -125,20 +130,6 @@ def test_run_sharded_explicit_mesh():
 # ---------------------------------------------------------------------------
 
 
-def _count_primitive(jaxpr, name):
-    cnt = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            cnt += 1
-        for v in eqn.params.values():
-            for u in (v if isinstance(v, (list, tuple)) else [v]):
-                if hasattr(u, "jaxpr"):
-                    cnt += _count_primitive(u.jaxpr, name)
-                elif hasattr(u, "eqns"):
-                    cnt += _count_primitive(u, name)
-    return cnt
-
-
 def test_hll_combine_is_single_pmax():
     d = min(2, N_DEV)
     plan = SketchPlan(HashSpec(family="cyclic", n=8),
@@ -168,6 +159,32 @@ def test_row_parallel_sketches_need_no_collective():
     jaxpr = jax.make_jaxpr(fn)(_h1v((4, 128)), _h1v((4, 128), 1))
     for prim in ("pmax", "psum", "all_gather", "all_to_all"):
         assert _count_primitive(jaxpr.jaxpr, prim) == 0, prim
+
+
+def test_data_mesh_is_cached_per_devices_and_count():
+    d = min(2, N_DEV)
+    # mesh is a static arg of the jit'd _run_sharded: the factory must
+    # return one object per (device-tuple, d) regardless of whether the
+    # running JAX version interns Mesh by value
+    assert shard.data_mesh(d) is shard.data_mesh(d)
+    assert shard.data_mesh() is shard.data_mesh(N_DEV)
+
+
+def test_run_sharded_traces_once_across_repeated_calls():
+    # the per-batch service pattern: run_auto(..., data_shards=...) every
+    # step — same plan, same shapes — must compile the sharded executor
+    # exactly once, not once per step
+    d = min(2, N_DEV)
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("card", HLLSpec(b=4)),
+                       ("freq", CountMinSpec(depth=3, log2_width=8))))
+    cp = CountMinSketch(depth=3, log2_width=8).init(jax.random.PRNGKey(0))
+    ops = {"freq": {"a": cp["a"], "b": cp["b"]}}
+    before = shard._run_sharded._cache_size()
+    for step in range(4):
+        shard.run_auto(plan, _h1v((6, 128), seed=step), operands=ops,
+                       data_shards=d)
+    assert shard._run_sharded._cache_size() - before == 1
 
 
 # ---------------------------------------------------------------------------
