@@ -29,20 +29,28 @@ def main() -> None:
             os.environ["XLA_FLAGS"] = (
                 "--xla_force_host_platform_device_count=8 " + _flags).strip()
     from benchmarks import (fig1_speed, pipeline_bench, shard_scaling,
-                            sketch_fusion, stats_onepass, table1_properties)
+                            sketch_fusion, stats_onepass, stream_scaling,
+                            table1_properties)
     n_chars = int(os.environ.get("REPRO_BENCH_CHARS", 4_300_000))
     rows = []
     print("name,us_per_call,derived")
-    # shard_scaling runs FIRST: the 1/2/4/8 device sweep compares points
-    # against each other, so it needs the runtime (thread pools, allocator)
-    # in the same state for every point — not whatever the previous
-    # sections left behind
-    for mod, kw in ((shard_scaling, {"scale": n_chars / 4_300_000}),
-                    (fig1_speed, {"n_chars": n_chars}),
-                    (table1_properties, {}),
-                    (pipeline_bench, {}),
-                    (sketch_fusion, {}),
-                    (stats_onepass, {})):
+    # INVARIANT: shard_scaling runs FIRST. The 1/2/4/8 device sweep compares
+    # its points against each other, so every point must see identical
+    # runtime state (thread pools, allocator, jit caches) — not whatever a
+    # previous section left behind. BENCH_pr4 recorded an inverted sweep
+    # (d1 beating d2/4/8) when the sweep ran under degraded smoke settings;
+    # the assert below pins the ordering half of that invariant so a
+    # refactor cannot silently demote the section again.
+    sections = ((shard_scaling, {"scale": n_chars / 4_300_000}),
+                (stream_scaling, {"scale": n_chars / 4_300_000}),
+                (fig1_speed, {"n_chars": n_chars}),
+                (table1_properties, {}),
+                (pipeline_bench, {}),
+                (sketch_fusion, {}),
+                (stats_onepass, {}))
+    assert sections[0][0] is shard_scaling, \
+        "shard_scaling must be the first benchmark section (see comment)"
+    for mod, kw in sections:
         try:
             section = mod.run(**kw)
         except Exception as e:  # noqa: BLE001 - a broken section must not
@@ -65,7 +73,7 @@ def main() -> None:
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr4.json"))
+                     "BENCH_pr5.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

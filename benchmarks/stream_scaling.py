@@ -1,0 +1,165 @@
+"""Chunked streaming executor vs the bucketed data-plane (PR 5).
+
+Three measurements, all parity-asserted before timing so a speedup is never
+measured against a semantically different computation:
+
+* **chunked vs bucketed corpus signing** — ``MinHashDeduper`` over a
+  mixed-length corpus (log-uniform lengths, the shape-bucket worst case):
+  the streaming path signs everything through ONE compiled ``(rows,
+  chunk_s)`` executor with donated carry, the legacy bucketed path compiles
+  one executor per (length-bucket, row-bucket) shape. Both total time and
+  the observed compile counts are recorded (the compile-count gap is the
+  architectural point; steady-state rows re-run after warmup show the
+  dispatch cost alone).
+* **donation on vs off** — the steady-state ``stream.update`` loop over a
+  long stream with the carry donated vs copied. On CPU the allocator hides
+  most of the reuse win; the row records the trajectory for real-TPU runs.
+* **run_stream vs one-shot api.run** — one long (B, S) batch signed whole
+  (one big compile, O(S) live memory) vs streamed in fixed tiles (one small
+  compile, O(chunk) live memory); times the steady state of both.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.kernels import api, stream
+from repro.kernels.plan import HashSpec, MinHashSpec, SketchPlan
+
+
+def _timeit(fn, reps=5):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _stream_traces() -> int:
+    return (stream._update_plain._cache_size()
+            + stream._update_donated._cache_size())
+
+
+def _mixed_corpus(n_docs: int, rng):
+    # log-uniform lengths 8..8192: every power-of-two bucket is populated,
+    # the worst case for the bucketed path's compile count
+    lens = np.exp(rng.uniform(np.log(8), np.log(8192), size=n_docs))
+    return [rng.integers(0, 65536, size=int(n)).astype(np.int32)
+            for n in lens]
+
+
+def _signing_rows(n_docs: int):
+    rng = np.random.default_rng(0)
+    docs = _mixed_corpus(n_docs, rng)
+    dd = MinHashDeduper(DedupConfig(vocab=65536))
+
+    t0 = _stream_traces()
+    cold_stream = _timeit(lambda: dd.signature_many(docs), reps=1)
+    stream_traces = _stream_traces() - t0
+
+    b0 = dd._sig_fn._cache_size()
+    cold_bucket = _timeit(lambda: dd.signature_many_bucketed(docs), reps=1)
+    bucket_traces = dd._sig_fn._cache_size() - b0
+
+    want = dd.signature_many_bucketed(docs)
+    np.testing.assert_array_equal(dd.signature_many(docs), want)  # bit-exact
+
+    t_stream = _timeit(lambda: dd.signature_many(docs), reps=3)
+    t_bucket = _timeit(lambda: dd.signature_many_bucketed(docs), reps=3)
+    dd.close()
+    return [
+        {"name": f"stream_sign_chunked_{n_docs}docs",
+         "us_per_call": t_stream * 1e6,
+         "derived": f"{n_docs / t_stream:.1f} docs/s steady; "
+                    f"{stream_traces} compile(s), cold {cold_stream*1e3:.0f}ms"},
+        {"name": f"stream_sign_bucketed_{n_docs}docs",
+         "us_per_call": t_bucket * 1e6,
+         "derived": f"{n_docs / t_bucket:.1f} docs/s steady; "
+                    f"{bucket_traces} compiles, cold {cold_bucket*1e3:.0f}ms; "
+                    f"chunked is {t_bucket / t_stream:.2f}x steady-state"},
+    ]
+
+
+def _donation_rows(B: int = 32, chunk_s: int = 512, n_chunks: int = 32):
+    plan = SketchPlan(HashSpec(family="cyclic", n=8, L=32),
+                      (("sig", MinHashSpec(k=64)),))
+    key = jax.random.PRNGKey(0)
+    kx, ka, kb = jax.random.split(key, 3)
+    chunk = jax.random.bits(kx, (B, chunk_s), dtype=jnp.uint32)
+    operands = {"sig": {"a": jax.random.bits(ka, (64,), dtype=jnp.uint32)
+                        | np.uint32(1),
+                        "b": jax.random.bits(kb, (64,), dtype=jnp.uint32)}}
+
+    def loop(donate):
+        state = stream.init_state(plan, B)
+        for _ in range(n_chunks):
+            state = stream.update(plan, state, chunk, operands=operands,
+                                  donate=donate)
+        return jax.block_until_ready(state["sketch"]["sig"])
+
+    np.testing.assert_array_equal(np.asarray(loop(True)),
+                                  np.asarray(loop(False)))   # bit-exact
+    t_on = _timeit(lambda: loop(True), reps=3)
+    t_off = _timeit(lambda: loop(False), reps=3)
+    toks = B * chunk_s * n_chunks
+    backend = jax.default_backend()
+    return [
+        {"name": f"stream_carry_donated_{n_chunks}x{B}x{chunk_s}",
+         "us_per_call": t_on * 1e6,
+         "derived": f"{toks / t_on / 1e6:.1f} Mtok/s ({backend})"},
+        {"name": f"stream_carry_copied_{n_chunks}x{B}x{chunk_s}",
+         "us_per_call": t_off * 1e6,
+         "derived": f"{toks / t_off / 1e6:.1f} Mtok/s; donation delta "
+                    f"{(t_off - t_on) / t_off * 100:+.1f}% wall on "
+                    f"{backend} (buffer-reuse win is a device-memory "
+                    f"property; CPU allocator hides it)"},
+    ]
+
+
+def _oneshot_rows(B: int = 16, S: int = 16384, chunk_s: int = 1024):
+    plan = SketchPlan(HashSpec(family="cyclic", n=8, L=32),
+                      (("sig", MinHashSpec(k=64)),))
+    key = jax.random.PRNGKey(1)
+    kx, ka, kb = jax.random.split(key, 3)
+    h1v = jax.random.bits(kx, (B, S), dtype=jnp.uint32)
+    operands = {"sig": {"a": jax.random.bits(ka, (64,), dtype=jnp.uint32)
+                        | np.uint32(1),
+                        "b": jax.random.bits(kb, (64,), dtype=jnp.uint32)}}
+    want = np.asarray(api.run(plan, h1v, operands=operands)["sig"])
+    np.testing.assert_array_equal(
+        np.asarray(stream.run_stream(plan, h1v, chunk_s=chunk_s,
+                                     operands=operands)["sig"]), want)
+    t_one = _timeit(lambda: jax.block_until_ready(
+        api.run(plan, h1v, operands=operands)["sig"]), reps=3)
+    t_str = _timeit(lambda: jax.block_until_ready(
+        stream.run_stream(plan, h1v, chunk_s=chunk_s,
+                          operands=operands)["sig"]), reps=3)
+    toks = B * S
+    return [
+        {"name": f"stream_oneshot_api_run_{B}x{S}",
+         "us_per_call": t_one * 1e6,
+         "derived": f"{toks / t_one / 1e6:.1f} Mtok/s, O(S) live"},
+        {"name": f"stream_run_stream_{B}x{S}_c{chunk_s}",
+         "us_per_call": t_str * 1e6,
+         "derived": f"{toks / t_str / 1e6:.1f} Mtok/s, O(chunk) live; "
+                    f"{t_one / t_str:.2f}x vs one-shot"},
+    ]
+
+
+def run(n_docs: int = 256, scale: float = 1.0):
+    """``scale`` (run.py passes REPRO_BENCH_CHARS / 4.3M) shrinks the
+    workloads for smoke runs; floors keep every measurement meaningful."""
+    scale = min(1.0, max(scale, 0.0))
+    n_docs = max(32, int(n_docs * scale))
+    return _signing_rows(n_docs) + _donation_rows() + _oneshot_rows()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

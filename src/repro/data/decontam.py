@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BloomFilter, make_family
-from repro.kernels import shard
+from repro.kernels import shard, stream
 from repro.kernels.plan import BloomSpec, HashSpec, SketchPlan
 
 
@@ -69,6 +69,8 @@ class Decontaminator:
             self.plan.hash.out_bits, self.fam_b.out_bits)
         self._add = jax.jit(self._add_impl)
         self._scan = jax.jit(self._scan_impl)
+        self._lookups = jax.jit(lambda t: (self.fam_a._lookup(self.pa, t),
+                                           self.fam_b._lookup(self.pb, t)))
 
     def _hashes(self, tokens) -> Tuple[jnp.ndarray, jnp.ndarray]:
         ha = self.fam_a.pairwise_bits(
@@ -102,3 +104,38 @@ class Decontaminator:
 
     def flag(self, tokens: np.ndarray) -> np.ndarray:
         return self.contamination(tokens) > self.cfg.max_hit_frac
+
+    # -- true streaming (unbounded train streams, fixed chunk shape) --------
+
+    def init_stream(self, batch: int) -> dict:
+        """Open ``batch`` parallel unbounded train streams: hit counts (and
+        the double rolling-hash tails) carry across chunks, so a window
+        spanning two chunks is still probed — the whole-batch scan would
+        need the full sequence resident. ``seen`` tracks per-row consumed
+        symbols host-side for the final fraction."""
+        return {"stream": stream.init_state(self.plan, batch, mesh=self.mesh,
+                                            data_shards=self.cfg.data_shards),
+                "seen": np.zeros((batch,), np.int64)}
+
+    def update_stream(self, sstate: dict, tokens, lengths=None) -> dict:
+        """Fold one (B, C) token chunk into the stream scan."""
+        tokens = jnp.asarray(tokens, jnp.uint32)
+        B, C = tokens.shape
+        ha, hb = self._lookups(tokens)
+        st = stream.update(
+            self.plan, sstate["stream"], ha, chunk_b=hb, lengths=lengths,
+            operands={"bloom": {"bits": self.bits}}, impl=self.cfg.impl,
+            mesh=self.mesh, data_shards=self.cfg.data_shards)
+        got = (np.full((B,), C, np.int64) if lengths is None
+               else np.asarray(lengths, np.int64))
+        return {"stream": st, "seen": sstate["seen"] + got}
+
+    def finalize_stream(self, sstate: dict) -> np.ndarray:
+        """-> (B,) fraction of each stream's windows present in the eval
+        set (0.0 for streams shorter than one window)."""
+        B = len(sstate["seen"])
+        counts = np.asarray(stream.finalize(self.plan, sstate["stream"],
+                                            batch=B)["bloom"], np.int64)
+        windows = np.maximum(sstate["seen"] - self.cfg.ngram_n + 1, 0)
+        return np.where(windows > 0,
+                        counts / np.maximum(windows, 1), 0.0)

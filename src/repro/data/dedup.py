@@ -6,15 +6,20 @@ near-duplicate. Pairwise independence of the window hashes is exactly what
 makes the MinHash collision estimator unbiased, and it is the property the
 paper proves CYCLIC (after the (n-1)-bit discard) to have.
 
-The data-plane is *batched and fused*: a one-MinHash :class:`SketchPlan`
-is built once at construction and documents are bucket-padded into (D, S)
-batches signed by one ``api.run(plan, ...)`` call per bucket — the rolling
-hash (CYCLIC or GENERAL), the Theorem-1 discard, and the k-lane affine
-remix + min all happen in a single device pass (kernels/sketch_fused.py on
-TPU, one fused jit on CPU), so the (D, S-n+1) window-hash array and its
-k=64x MinHash expansion never round-trip HBM. Padded windows are excluded
-from the min outright, making a padded row's signature bit-identical to the
-unpadded document's — signatures are independent of bucket size.
+The data-plane is *streamed, batched and fused*: a one-MinHash
+:class:`SketchPlan` is built once at construction and documents are signed
+by the chunked streaming executor (:mod:`repro.kernels.stream`) — groups of
+``stream_rows`` documents advance through fixed ``(stream_rows,
+stream_chunk_s)`` tiles with the signature state carried (and donated)
+across chunks, so the WHOLE corpus signs through ONE compiled executor
+shape (the old shape-bucket group-by paid one jit compile and one dispatch
+per power-of-two length bucket, and could not sign a document longer than
+one device buffer). The rolling hash (CYCLIC or GENERAL), the Theorem-1
+discard, and the k-lane affine remix + min still all happen in a single
+fused device pass per chunk; masked windows are excluded from the min
+outright, so signatures are independent of chunking and bit-identical to
+the one-shot bucketed path (kept as :meth:`signature_many_bucketed` — the
+fallback for non-fused families and the benchmark baseline).
 
 Scaling out (two independent axes):
 * **signing** — a ``mesh``/``data_shards`` knob routes the bucket batches
@@ -50,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Cyclic, General, MinHash, make_family
-from repro.kernels import api, shard
+from repro.kernels import api, shard, stream
 from repro.kernels import ref as kref
 from repro.kernels.plan import HashSpec, MinHashSpec, SketchPlan
 
@@ -90,11 +95,22 @@ class DedupConfig:
     # probe the band-sharded LSH index on a thread pool of this many workers
     # (0/1 = in-line; band shards are independent either way)
     lsh_workers: int = 0
+    # chunked streaming signing: documents advance through fixed
+    # (stream_rows, stream_chunk_s) tiles — ONE compiled shape for the
+    # whole corpus, any document length
+    stream_rows: int = 64
+    stream_chunk_s: int = 512
+    # donate the carried signature state between chunks ("auto": on for
+    # backends with donation support)
+    stream_donate: object = "auto"
 
 
 def _bucket(n: int) -> int:
-    """Next power-of-two length >= n (min 64): O(log) distinct jit shapes."""
-    return max(64, 1 << int(np.ceil(np.log2(max(n, 2)))))
+    """Next power-of-two length >= n: O(log) distinct jit shapes (the
+    bucketed fallback/baseline path only; the min-64 floor that papered
+    over the engine's old S < n rejection is gone — short rows are legal
+    and simply carry n_windows = 0)."""
+    return 1 << int(np.ceil(np.log2(max(n, 2))))
 
 
 class BandShardedLSHIndex:
@@ -222,6 +238,10 @@ class MinHashDeduper:
         self._sigs: List[np.ndarray] = []
         self._sig_fn = jax.jit(self._signature_batch_impl)
         self._sig_one_fn = jax.jit(self._signature_unfused_impl)
+        # streaming signing: the h1 lookup for one fixed-shape token chunk
+        # (one trace; the chunk then flows through stream.update)
+        self._lookup_fn = jax.jit(
+            lambda toks: self.fam._lookup(self.fam_params, toks))
 
     @property
     def _bands(self) -> List[Dict[bytes, List[int]]]:
@@ -277,26 +297,82 @@ class MinHashDeduper:
         return jnp.min(mixed, axis=-1)
 
     def signature_many(self, docs: Sequence[np.ndarray]) -> np.ndarray:
-        """Sign a whole document list: (D, k) uint32 in one device call per
-        (length-bucket, row-bucket) shape — not one per document."""
+        """Sign a whole document list: (D, k) uint32 through the chunked
+        streaming executor — ONE compiled shape for the entire corpus.
+
+        Documents are grouped ``stream_rows`` at a time *by descending
+        length* (signatures are per-row and order-independent, so packing
+        similar lengths together just minimizes masked-row waste); each
+        group advances through fixed ``(stream_rows, stream_chunk_s)`` token
+        tiles with the signature state carried (and donated) across chunks,
+        so mixed-length corpora — including documents longer than any single
+        device buffer — never trigger a retrace. Rows that run out of
+        symbols simply submit 0-length chunks; a document shorter than the
+        n-gram window signs to the sentinel signature, exactly as the
+        one-shot path masks it. Non-fused families fall back to
+        :meth:`signature_many_bucketed`.
+        """
+        if self.plan is None:
+            return self.signature_many_bucketed(docs)
+        cfg = self.cfg
+        D = len(docs)
+        out = np.empty((D, cfg.n_signatures), np.uint32)
+        Bt, Cs = cfg.stream_rows, cfg.stream_chunk_s
+        operands = {"sig": {"a": self.mh_params["a"],
+                            "b": self.mh_params["b"]}}
+        order = np.argsort([-len(d) for d in docs], kind="stable")
+        for g in range(0, D, Bt):
+            sel = order[g : g + Bt]
+            group = [np.asarray(docs[i]) for i in sel]
+            lens = np.array([len(d) for d in group], np.int64)
+            state = stream.init_state(self.plan, Bt, mesh=self.mesh,
+                                      data_shards=cfg.data_shards)
+            for c in range(max(1, -(-int(lens.max(initial=0)) // Cs))):
+                lo = c * Cs
+                toks = np.zeros((Bt, Cs), np.uint32)
+                lengths = np.zeros((Bt,), np.int32)
+                for r, d in enumerate(group):
+                    v = int(np.clip(len(d) - lo, 0, Cs))
+                    if v:
+                        toks[r, :v] = d[lo : lo + v]
+                        lengths[r] = v
+                state = stream.update(
+                    self.plan, state, self._lookup_fn(jnp.asarray(toks)),
+                    lengths=lengths, operands=operands, impl=cfg.impl,
+                    donate=cfg.stream_donate, mesh=self.mesh,
+                    data_shards=cfg.data_shards)
+            sigs = np.asarray(stream.finalize(self.plan, state,
+                                              batch=Bt)["sig"])
+            out[sel] = sigs[: len(group)]
+        return out
+
+    def signature_many_bucketed(self, docs: Sequence[np.ndarray]) -> np.ndarray:
+        """The pre-streaming signing path: one device call per
+        (length-bucket, row-bucket) shape — O(log) distinct jit shapes.
+        Kept as the fallback for families outside the fused engine and as
+        the baseline the streaming path is benchmarked (and parity-tested)
+        against."""
         D = len(docs)
         out = np.empty((D, self.cfg.n_signatures), np.uint32)
         groups: Dict[int, List[int]] = {}
         for i, d in enumerate(docs):
             groups.setdefault(_bucket(len(d)), []).append(i)
         for bucket, idxs in sorted(groups.items()):
+            # the unfused fallback families roll their hash over the padded
+            # width directly, so it must admit at least one physical window
+            width = max(bucket, self.cfg.ngram_n)
             # cap rows so the CPU path's (rows, bucket, k_chunk) remix tile
             # stays bounded (~64 MB) regardless of bucket size
             max_rows = max(8, (1 << 20) // bucket)
             for s in range(0, len(idxs), max_rows):
                 chunk = idxs[s : s + max_rows]
                 Dp = max(8, 1 << int(np.ceil(np.log2(len(chunk)))))
-                toks = np.zeros((Dp, bucket), np.uint32)
+                toks = np.zeros((Dp, width), np.uint32)
                 nw = np.zeros((Dp,), np.int32)
                 for r, i in enumerate(chunk):
                     d = np.asarray(docs[i])
                     toks[r, : len(d)] = d
-                    nw[r] = len(d) - self.cfg.ngram_n + 1
+                    nw[r] = max(0, len(d) - self.cfg.ngram_n + 1)
                 sigs = np.asarray(self._sig_fn(jnp.asarray(toks),
                                                jnp.asarray(nw)))
                 out[np.asarray(chunk)] = sigs[: len(chunk)]
@@ -309,9 +385,10 @@ class MinHashDeduper:
         """Per-document unfused signature (benchmark baseline; bit-identical
         to :meth:`signature`)."""
         n = len(tokens)
-        padded = np.zeros(_bucket(n), dtype=np.uint32)
+        # the unfused hash needs at least one physical window to roll over
+        padded = np.zeros(max(_bucket(n), self.cfg.ngram_n), dtype=np.uint32)
         padded[:n] = tokens
-        n_windows = n - self.cfg.ngram_n + 1
+        n_windows = max(0, n - self.cfg.ngram_n + 1)
         return np.asarray(self._sig_one_fn(jnp.asarray(padded), n_windows))
 
     # -- LSH band index -----------------------------------------------------
@@ -342,8 +419,9 @@ class MinHashDeduper:
     def add_batch(self, docs: Sequence[np.ndarray]) -> np.ndarray:
         """Dedup a document batch; returns (D,) bool duplicate flags.
 
-        Signing is one fused (optionally shard_map'd) device call per shape
-        bucket; candidate generation probes every shard of the band-sharded
+        Signing streams fixed-shape chunks through ONE compiled fused
+        (optionally shard_map'd) executor, carrying signature state across
+        chunks; candidate generation probes every shard of the band-sharded
         LSH index — a vectorized group-by per band, fanned out across bands
         — against both the batch and the existing index. Only candidate
         pairs are Jaccard-verified, sequentially in document order, so the

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CountMinSketch, HyperLogLog, make_family
-from repro.kernels import ops, shard
+from repro.kernels import ops, shard, stream
 from repro.kernels.plan import CountMinSpec, HashSpec, HLLSpec, SketchPlan
 
 
@@ -91,6 +91,7 @@ class NgramStats:
             assert self.plan.hash.out_bits == self.hll.hash_bits, (
                 self.plan.hash.out_bits, self.hll.hash_bits)
         self._update = jax.jit(self._update_impl)
+        self._lookup = jax.jit(lambda t: self.fam._lookup(self.fp, t))
 
     def init_state(self) -> Dict:
         # token counter: uint32 (lo, hi) pair — int32 wraps negative at
@@ -143,6 +144,53 @@ class NgramStats:
 
     def update(self, state: Dict, tokens: jnp.ndarray) -> Dict:
         return self._update(state, jnp.asarray(tokens, jnp.uint32))
+
+    # -- true streaming (unbounded token streams, fixed chunk shape) --------
+
+    def init_stream(self, batch: int, state: Optional[Dict] = None) -> Dict:
+        """Open ``batch`` parallel unbounded token streams, continuing from
+        ``state`` (default: a fresh :meth:`init_state`).
+
+        The whole-batch :meth:`update` recomputes a (B, S) batch's windows
+        from scratch each call and cannot span batch boundaries; the stream
+        API instead carries the rolling-hash tail and the sketch states
+        across arbitrarily many fixed-shape chunks (donated buffers, one
+        compiled executor), so an n-gram spanning two chunks of a stream is
+        still counted — the paper's one-pass shape. Fused families only.
+        """
+        if self.plan is None:
+            raise ValueError(
+                f"streaming stats needs a fused family (cyclic|general), "
+                f"not {self.cfg.family!r}")
+        state = state or self.init_state()
+        sstate = stream.init_state(
+            self.plan, batch, carry={"hll": state["hll"],
+                                     "cms": state["cms"]},
+            mesh=self.mesh, data_shards=self.cfg.data_shards)
+        return {"stream": sstate, "tokens": state["tokens"]}
+
+    def update_stream(self, sstate: Dict, tokens, lengths=None) -> Dict:
+        """Fold one (B, C) token chunk into the stream (rows advance
+        independently; ``lengths`` marks the real symbols per row)."""
+        tokens = jnp.asarray(tokens, jnp.uint32)
+        st = stream.update(
+            self.plan, sstate["stream"], self._lookup(tokens),
+            lengths=lengths,
+            operands={"cms": {"a": self._cms_params["a"],
+                              "b": self._cms_params["b"]}},
+            impl=self.cfg.impl, mesh=self.mesh,
+            data_shards=self.cfg.data_shards)
+        added = (int(tokens.shape[0]) * int(tokens.shape[1])
+                 if lengths is None else int(np.sum(np.asarray(lengths))))
+        return {"stream": st,
+                "tokens": self._count_tokens(sstate["tokens"], added)}
+
+    def finalize_stream(self, sstate: Dict) -> Dict:
+        """Close the stream into an ordinary stats state (the carried HLL
+        registers and CMS table ARE the running state — no re-merge)."""
+        out = stream.finalize(self.plan, sstate["stream"])
+        return {"hll": out["hll"], "cms": out["cms"],
+                "tokens": sstate["tokens"]}
 
     def distinct_ngrams(self, state: Dict) -> float:
         return float(self.hll.estimate(state["hll"]))

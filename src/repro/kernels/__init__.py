@@ -13,6 +13,11 @@ itself) and their data-plane consumers.
                    one pmax combine for HLL registers, one psum for the
                    CountMin table; bit-identical at any device count via
                    n_windows=0 padding rows; Mesh cached per device set)
+- stream.py        chunked streaming executor: fixed (B, chunk_S) tiles with
+                   an explicit carry (rolling-hash tail + every sketch's
+                   state via its `init` operand), donated between chunks —
+                   ONE compiled shape for any stream length, bit-identical
+                   to one-shot api.run; composes with shard.py's data mesh
 - cyclic.py        rolling CYCLIC hash: direct-window + parallel-prefix modes
 - general.py       rolling GENERAL hash (clmul shift-reduce, trace-time consts)
 - sketch_fused.py  THE fused-kernel module: the plan kernel (family-generic

@@ -73,31 +73,84 @@ def flatten(x: jnp.ndarray):
     return x.reshape((-1, x.shape[-1])), lead
 
 
-def prepare(h1v: jnp.ndarray, *, n: int, impl: str):
+def prepare(h1v: jnp.ndarray, *, n: int, impl: str, allow_short: bool = False):
     """The one validated prologue every kernel entry point shares: flatten
     leading dims, check the window fits, resolve the impl dispatch.
 
-    Returns (x (B, S), lead shape, use_ref flag)."""
+    ``allow_short=True`` (the sketch engine) accepts ``S < n`` — a short row
+    is legal in a padded/chunked batch and simply has ``n_windows = 0`` — by
+    zero-padding up to ``S = n`` so the kernels have one physical window to
+    tile over (fully masked by the W=0 clamp in :func:`validate`). The
+    plain-hash entry points keep the hard error: their *output* is the
+    window-hash array, which has no rows to return when S < n.
+
+    Returns (x (B, max(S, n)), lead shape, use_ref flag)."""
     ref_path = use_ref(impl)        # validates impl before any shape work
     x, lead = flatten(jnp.asarray(h1v))
     S = x.shape[-1]
     if S < n:
-        raise ValueError(f"sequence length {S} < window n={n}")
+        if not allow_short:
+            raise ValueError(f"sequence length {S} < window n={n}")
+        x = jnp.pad(x, ((0, 0), (0, n - S)))
     return x, lead, ref_path
 
 
+def check_row_counts(counts, what: str, upper: Optional[int] = None) -> None:
+    """Reject out-of-range concrete per-row counts with the offending row
+    index: negative always (a negative count would otherwise flow silently
+    into the mask iota compare), and above ``upper`` when one is given.
+    Under a caller's jit trace the values are abstract and the check is
+    skipped (the engine's clamps still treat any negative as "none")."""
+    if isinstance(counts, jax.core.Tracer):
+        return
+    vals = np.asarray(counts)
+    neg = vals < 0
+    if neg.any():
+        i = int(np.argmax(neg))
+        raise ValueError(
+            f"{what} must be non-negative; row {i} has {int(vals[i])}")
+    if upper is not None:
+        over = vals > upper
+        if over.any():
+            i = int(np.argmax(over))
+            raise ValueError(
+                f"{what} must be <= {upper}; row {i} has {int(vals[i])}")
+
+
 def norm_windows(n_windows, B: int, W: int) -> jnp.ndarray:
-    """-> (B,) int32 valid-window counts, clamped to the physical W."""
+    """-> (B,) int32 valid-window counts, clamped to the physical W
+    (over-long counts are legal and clamped — a padded batch's rows may all
+    declare "every window"); negative concrete counts are rejected with the
+    offending row index (:func:`check_row_counts`)."""
     if n_windows is None:
         return jnp.full((B,), W, jnp.int32)
     nw = jnp.asarray(n_windows, jnp.int32).reshape(-1)
     if nw.shape != (B,):
         raise ValueError(f"n_windows shape {nw.shape} != batch ({B},)")
+    check_row_counts(nw, "n_windows")
     return jnp.minimum(nw, np.int32(W))
 
 
-def _check_operands(plan: SketchPlan, operands) -> Dict[str, dict]:
-    """Every sketch gets exactly the operand arrays its spec declares."""
+def norm_w_start(w_start, B: int, W: int):
+    """-> (B,) int32 first-valid-window indices (or None = 0 everywhere).
+
+    ``w_start`` is the lower edge of the per-row validity range — window
+    ``j`` of row ``i`` counts iff ``w_start[i] <= j < n_windows[i]``. The
+    streaming executor uses it to exclude windows that would span a chunk's
+    zero-filled history at the very start of a stream."""
+    if w_start is None:
+        return None
+    ws = jnp.asarray(w_start, jnp.int32).reshape(-1)
+    if ws.shape != (B,):
+        raise ValueError(f"w_start shape {ws.shape} != batch ({B},)")
+    return jnp.clip(ws, 0, np.int32(W))
+
+
+def _check_operands(plan: SketchPlan, operands,
+                    batch: Optional[int] = None) -> Dict[str, dict]:
+    """Every sketch gets exactly the operand arrays its spec declares, plus
+    an optional ``init`` carry-in of its running state (validated against
+    the spec's ``state_struct`` when the flattened batch size is known)."""
     operands = dict(operands or {})
     unknown = set(operands) - set(plan.names)
     if unknown:
@@ -105,10 +158,17 @@ def _check_operands(plan: SketchPlan, operands) -> Dict[str, dict]:
     for name, spec in plan.sketches:
         got = {k: jnp.asarray(v) for k, v in operands.get(name, {}).items()}
         want = spec.operand_names
-        if set(got) != set(want):
+        if set(got) - {"init"} != set(want):
             raise ValueError(
                 f"sketch {name!r} ({type(spec).__name__}) needs operands "
                 f"{list(want)}, got {sorted(got)}")
+        if "init" in got and batch is not None:
+            shape, dtype, _ = spec.state_struct(batch)
+            if got["init"].shape != shape:
+                raise ValueError(
+                    f"sketch {name!r}: init carry shape {got['init'].shape} "
+                    f"!= state shape {shape} (flattened batch {batch})")
+            got["init"] = got["init"].astype(dtype)
         if isinstance(spec, MinHashSpec):
             for op in ("a", "b"):
                 if got[op].shape != (spec.k,):
@@ -132,48 +192,62 @@ def _check_operands(plan: SketchPlan, operands) -> Dict[str, dict]:
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _run_ref(plan, x, xb, nw, operands):
+def _run_ref(plan, x, xb, nw, ws, operands):
     """One jit per distinct plan: the whole multi-sketch graph is a single
     device dispatch on the CPU path."""
-    return _ref.sketch_plan_ref(plan, x, xb, nw, operands)
+    return _ref.sketch_plan_ref(plan, x, xb, nw, operands, w_start=ws)
 
 
-def validate(plan: SketchPlan, h1v, h1v_b, n_windows, operands, impl: str):
+def validate(plan: SketchPlan, h1v, h1v_b, n_windows, operands, impl: str,
+             w_start=None):
     """The shared front half of :func:`run`: validate + normalize everything.
 
-    Returns ``(x (B, S), xb (B, S) | None, nw (B,), operands, lead, ref_path)``
-    ready for :func:`execute`. Kept separate so the sharded entry point
-    (:func:`repro.kernels.shard.run_sharded`) raises exactly the same errors
-    and feeds exactly the same normalized arrays as the single-device path.
+    Returns ``(x (B, S), xb (B, S) | None, nw (B,), ws (B,) | None,
+    operands, lead, ref_path)`` ready for :func:`execute`. Kept separate so
+    the sharded entry point (:func:`repro.kernels.shard.run_sharded`) raises
+    exactly the same errors and feeds exactly the same normalized arrays as
+    the single-device path.
+
+    ``S < n`` inputs are legal here (every row simply has zero valid
+    windows): the rows are zero-padded to ``S = n`` and the window clamp
+    masks everything, so e.g. a dedup chunk of documents all shorter than
+    the n-gram window signs to sentinel signatures instead of raising.
     """
     if not isinstance(plan, SketchPlan):
         raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
-    x, lead, ref_path = prepare(h1v, n=plan.hash.n, impl=impl)
+    n = plan.hash.n
+    h1v = jnp.asarray(h1v)
+    S0 = h1v.shape[-1]
+    x, lead, ref_path = prepare(h1v, n=n, impl=impl, allow_short=True)
     B, S = x.shape
-    operands = _check_operands(plan, operands)
+    operands = _check_operands(plan, operands, B)
     xb = None
     if plan.needs_second_stream:
         if h1v_b is None:
             raise ValueError("plan contains a BloomSpec: the double-hashing "
                              "probe stride needs a second stream h1v_b")
-        xb, _ = flatten(jnp.asarray(h1v_b))
-        if xb.shape != x.shape:
-            raise ValueError(f"h1v_b shape {xb.shape} != h1v shape {x.shape}")
+        xbf, _ = flatten(jnp.asarray(h1v_b))
+        if xbf.shape != (B, S0):
+            raise ValueError(f"h1v_b shape {xbf.shape} != h1v shape {(B, S0)}")
+        xb = jnp.pad(xbf, ((0, 0), (0, S - S0))) if S0 < S else xbf
     elif h1v_b is not None:
         raise ValueError("h1v_b given but no sketch in the plan consumes a "
                          "second hash stream")
-    nw = norm_windows(n_windows, B, S - plan.hash.n + 1)
-    return x, xb, nw, operands, lead, ref_path
+    W = max(0, S0 - n + 1)          # windows of the *caller's* rows
+    nw = norm_windows(n_windows, B, W)
+    ws = norm_w_start(w_start, B, W)
+    return x, xb, nw, ws, operands, lead, ref_path
 
 
 def execute(plan: SketchPlan, x, xb, nw, operands, ref_path: bool,
-            **tile_kw) -> Dict[str, jnp.ndarray]:
+            w_start=None, **tile_kw) -> Dict[str, jnp.ndarray]:
     """The shared back half: dispatch validated (B, S) arrays to the fused
     Pallas kernel or the single-jit jnp executor. Pure in its array
     arguments — safe to call under ``shard_map`` on a per-device shard."""
     if ref_path:
-        return _run_ref(plan, x, xb, nw, operands)
+        return _run_ref(plan, x, xb, nw, w_start, operands)
     return _sf.sketch_plan_fused(x, xb, nw, operands, plan=plan,
+                                 w_start=w_start,
                                  interpret=not on_tpu(), **tile_kw)
 
 
@@ -194,7 +268,7 @@ def shape_outputs(plan: SketchPlan, out: Dict[str, jnp.ndarray],
 
 
 def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
-        operands=None, impl: str = "auto",
+        operands=None, impl: str = "auto", w_start=None,
         **tile_kw) -> Dict[str, jnp.ndarray]:
     """Execute a :class:`SketchPlan` over (..., S) h1-mapped values.
 
@@ -210,9 +284,17 @@ def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
       operands: ``{sketch_name: {operand_name: array}}`` runtime inputs —
         MinHash remix lanes ``a``/``b`` (k,), the packed Bloom filter
         ``bits`` (2^log2_m/32,), the CountMin row remix constants
-        ``a``/``b`` (depth,).
+        ``a``/``b`` (depth,). Each sketch also accepts an optional ``init``
+        carry-in of its running state (see the spec's ``state_struct``);
+        the executors initialize from it and fold new windows in with the
+        sketch's own merge operator instead of resetting — the streaming
+        executor's cross-chunk seam.
       impl: ``"auto"`` (Pallas on TPU, jnp graph elsewhere), ``"pallas"``
         (force the kernel; interpret-mode off-TPU), ``"ref"`` (force jnp).
+      w_start: optional (...,) per-row *first* valid window index (window j
+        counts iff ``w_start <= j < n_windows``); ``None`` means 0. Used by
+        the streaming executor to mask windows spanning a chunk's
+        zero-filled pre-stream history.
       **tile_kw: ``block_b`` / ``block_s`` overrides for the Pallas path.
 
     Returns:
@@ -221,7 +303,7 @@ def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
       CountMin (depth, 2^log2_width) int32 batch partial counts (additive:
       fold into running state with ``+``).
     """
-    x, xb, nw, operands, lead, ref_path = validate(
-        plan, h1v, h1v_b, n_windows, operands, impl)
-    out = execute(plan, x, xb, nw, operands, ref_path, **tile_kw)
+    x, xb, nw, ws, operands, lead, ref_path = validate(
+        plan, h1v, h1v_b, n_windows, operands, impl, w_start)
+    out = execute(plan, x, xb, nw, operands, ref_path, w_start=ws, **tile_kw)
     return shape_outputs(plan, out, lead)

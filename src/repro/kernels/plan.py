@@ -15,6 +15,16 @@ hash device pass feeding any number of sketch epilogues:
   constants) are *runtime* inputs of :func:`repro.kernels.api.run`, keyed by
   sketch name, so a plan stays a static, hashable trace key.
 
+Every sketch additionally accepts an optional ``init`` operand — a carry-in
+of its own running state (the shape/dtype/identity declared by
+:meth:`~MinHashSpec.state_struct` on each spec). The executors *initialize
+the sketch scratch from it* instead of resetting, folding the carry with the
+sketch's own merge operator (MinHash per-row running min, HLL register max,
+Bloom hit-count add, CountMin table add) — the seam the chunked streaming
+executor (:mod:`repro.kernels.stream`) is built on. ``state_kind`` tells the
+engine whether the state is per-batch-row (``"row"``: sharded with the rows)
+or corpus-level (``"global"``: one array merged across shards/chunks).
+
 Plans are frozen dataclasses of ints/strings/tuples: hashable, comparable,
 and safe to use as ``jax.jit`` static arguments — one compiled executor per
 distinct plan, shared by every call site that builds the same plan.
@@ -93,7 +103,9 @@ class HashSpec:
 
 @dataclasses.dataclass(frozen=True)
 class MinHashSpec:
-    """k-lane MinHash signature; needs runtime operands ``a``/``b`` (k,)."""
+    """k-lane MinHash signature; needs runtime operands ``a``/``b`` (k,).
+    Optional ``init`` carry: (B, k) uint32 running minima (identity: the
+    0xFFFFFFFF sentinel)."""
 
     k: int = 64
 
@@ -103,6 +115,12 @@ class MinHashSpec:
 
     operand_names: Tuple[str, ...] = dataclasses.field(
         default=("a", "b"), init=False, repr=False, compare=False)
+
+    state_kind = "row"
+
+    def state_struct(self, batch: int):
+        """(shape, dtype name, identity fill) of the carry/``init`` state."""
+        return (batch, self.k), "uint32", 0xFFFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +137,12 @@ class HLLSpec:
 
     operand_names: Tuple[str, ...] = dataclasses.field(
         default=(), init=False, repr=False, compare=False)
+
+    state_kind = "global"
+
+    def state_struct(self, batch: int):
+        """(shape, dtype name, identity fill) of the carry/``init`` state."""
+        return (1 << self.b,), "int32", 0
 
     def resolve_rank_bits(self, hash_spec: HashSpec) -> int:
         if self.rank_bits is not None:
@@ -148,6 +172,12 @@ class BloomSpec:
 
     operand_names: Tuple[str, ...] = dataclasses.field(
         default=("bits",), init=False, repr=False, compare=False)
+
+    state_kind = "row"
+
+    def state_struct(self, batch: int):
+        """(shape, dtype name, identity fill) of the carry/``init`` state."""
+        return (batch,), "int32", 0
 
     @property
     def n_words(self) -> int:
@@ -188,6 +218,12 @@ class CountMinSpec:
 
     operand_names: Tuple[str, ...] = dataclasses.field(
         default=("a", "b"), init=False, repr=False, compare=False)
+
+    state_kind = "global"
+
+    def state_struct(self, batch: int):
+        """(shape, dtype name, identity fill) of the carry/``init`` state."""
+        return (self.depth, self.width), "int32", 0
 
     @property
     def width(self) -> int:

@@ -97,21 +97,26 @@ def window_hashes_ref(h1v, *, family: str, n: int, L: int,
 
 
 def _masked_windows(h1v, n: int, L: int, hash_mask: int, n_windows,
-                    family: str = "cyclic", p: int = 0):
+                    family: str = "cyclic", p: int = 0, w_start=None):
     """(B, S) -> (B, W) window hashes with the discard mask applied and a
-    (B, W) bool validity mask (global window index < per-row count)."""
+    (B, W) bool validity mask (``w_start <= global window index <
+    n_windows``; ``w_start=None`` means 0)."""
     h = window_hashes_ref(h1v, family=family, n=n, L=L, p=p)
     h = h & np.uint32(hash_mask)
     idx = jnp.arange(h.shape[-1], dtype=jnp.int32)
     valid = idx[None, :] < n_windows.astype(jnp.int32)[:, None]
+    if w_start is not None:
+        valid &= idx[None, :] >= w_start.astype(jnp.int32)[:, None]
     return h, valid
 
 
-def minhash_reduce(h, valid, a, b, k_chunk: int = 16) -> jnp.ndarray:
+def minhash_reduce(h, valid, a, b, k_chunk: int = 16, init=None) -> jnp.ndarray:
     """(B, W) masked hashes -> (B, k) signatures; invalid windows excluded
     from the min entirely (post-remix sentinel substitution). The remix is
     evaluated in k-chunks so the full (B, W, k) expansion never materialises
-    on the CPU path."""
+    on the CPU path. ``init`` is an optional (B, k) carry of running minima
+    folded in with ``min`` (the MinHash merge operator) — uint32 min is
+    associative/commutative, so carrying across chunks is bit-exact."""
     outs = []
     k = a.shape[0]
     for s in range(0, k, k_chunk):
@@ -119,11 +124,13 @@ def minhash_reduce(h, valid, a, b, k_chunk: int = 16) -> jnp.ndarray:
         mixed = ac[None, None, :] * h[:, :, None] + bc[None, None, :]
         mixed = jnp.where(valid[:, :, None], mixed, _SENTINEL)
         outs.append(jnp.min(mixed, axis=1))
-    return jnp.concatenate(outs, axis=-1)
+    out = jnp.concatenate(outs, axis=-1)
+    return out if init is None else jnp.minimum(out, init)
 
 
-def _hll_reduce(h, valid, b: int, rank_bits: int) -> jnp.ndarray:
-    """(B, W) masked hashes -> (2^b,) int32 registers over valid windows."""
+def _hll_reduce(h, valid, b: int, rank_bits: int, init=None) -> jnp.ndarray:
+    """(B, W) masked hashes -> (2^b,) int32 registers over valid windows;
+    ``init`` optionally carries a register file in (merged by max)."""
     h, valid = h.reshape(-1), valid.reshape(-1)
     m = 1 << b
     idx = (h & np.uint32(m - 1)).astype(jnp.int32)
@@ -132,17 +139,19 @@ def _hll_reduce(h, valid, b: int, rank_bits: int) -> jnp.ndarray:
     tz = jax.lax.population_count(isolated - np.uint32(1))
     rank = (jnp.minimum(tz, np.uint32(rank_bits)) + 1).astype(jnp.int32)
     rank = jnp.where(valid, rank, 0)
-    return jnp.zeros((m,), jnp.int32).at[idx].max(rank)
+    out = jnp.zeros((m,), jnp.int32).at[idx].max(rank)
+    return out if init is None else jnp.maximum(out, init)
 
 
-def cms_reduce(h, valid, a, b, log2_width: int) -> jnp.ndarray:
+def cms_reduce(h, valid, a, b, log2_width: int, init=None) -> jnp.ndarray:
     """(B, W) masked hashes -> (depth, 2^log2_width) int32 partial counts.
 
     Row d's column is the top ``log2_width`` bits of the affine remix
     ``a[d]*h + b[d]`` (mod 2^32) — bit-identical to
     ``repro.core.CountMinSketch._cols`` — and invalid (padded) windows add
     0. Integer scatter-add is exact and order-free, so this is also the
-    Pallas fallback epilogue for tables too wide for VMEM scratch.
+    Pallas fallback epilogue for tables too wide for VMEM scratch. ``init``
+    optionally carries a running table in (counts merge by ``+``).
     """
     hf = h.astype(_U32).reshape(-1)
     vf = valid.reshape(-1).astype(jnp.int32)
@@ -151,20 +160,24 @@ def cms_reduce(h, valid, a, b, log2_width: int) -> jnp.ndarray:
     cols = (mixed >> np.uint32(32 - log2_width)).astype(jnp.int32)
     rows = jnp.broadcast_to(jnp.arange(depth, dtype=jnp.int32)[:, None],
                             cols.shape)
-    table = jnp.zeros((depth, 1 << log2_width), jnp.int32)
+    table = (jnp.zeros((depth, 1 << log2_width), jnp.int32) if init is None
+             else init)
     return table.at[rows, cols].add(
         jnp.broadcast_to(vf[None, :], cols.shape))
 
 
-def _bloom_reduce(ha, hb, valid, bits, k: int, log2_m: int) -> jnp.ndarray:
-    """Two (B, W) masked hash draws + packed filter -> (B,) hit counts."""
+def _bloom_reduce(ha, hb, valid, bits, k: int, log2_m: int,
+                  init=None) -> jnp.ndarray:
+    """Two (B, W) masked hash draws + packed filter -> (B,) hit counts;
+    ``init`` optionally carries running counts in (merged by ``+``)."""
     hb = hb | np.uint32(1)                       # odd probe stride
     i = jnp.arange(k, dtype=_U32)
     probes = (ha[..., None] + i * hb[..., None]) & np.uint32((1 << log2_m) - 1)
     word = (probes >> np.uint32(5)).astype(jnp.int32)
     bit = probes & np.uint32(31)
     hit = jnp.all(((bits[word] >> bit) & np.uint32(1)) == 1, axis=-1)
-    return jnp.sum(hit & valid, axis=-1, dtype=jnp.int32)
+    out = jnp.sum(hit & valid, axis=-1, dtype=jnp.int32)
+    return out if init is None else out + init
 
 
 def minhash_fused_ref(h1v, n_windows, a, b, *, n: int, L: int = 32,
@@ -191,20 +204,24 @@ def bloom_fused_ref(h1va, h1vb, n_windows, bits, *, n: int, k: int,
     return _bloom_reduce(ha, hb, valid, bits, k, log2_m)
 
 
-def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands) -> dict:
+def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands,
+                    w_start=None) -> dict:
     """Single-jnp-graph executor for a SketchPlan: ONE rolling-hash
     evaluation (per stream) feeds every requested sketch epilogue.
 
     Mirrors ``sketch_fused.sketch_plan_fused`` bit-for-bit; ``api.run``
     wraps it in one jit per plan so the whole multi-sketch graph is a
-    single device dispatch on the CPU path.
+    single device dispatch on the CPU path. A sketch's optional ``init``
+    operand carries its running state in; each epilogue folds it with its
+    own merge operator (min / max / + / +) — all exact on integers, so a
+    chunked run that threads the carry is bit-identical to one shot.
     """
     from repro.kernels.plan import (BloomSpec, CountMinSpec, HLLSpec,
                                     MinHashSpec)
 
     hs = plan.hash
     h, valid = _masked_windows(h1v, hs.n, hs.L, hs.hash_mask, n_windows,
-                               family=hs.family, p=hs.p)
+                               family=hs.family, p=hs.p, w_start=w_start)
     hb = None
     if plan.needs_second_stream:
         hb = window_hashes_ref(h1v_b, family=hs.family, n=hs.n, L=hs.L,
@@ -212,17 +229,19 @@ def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands) -> dict:
     out = {}
     for name, spec in plan.sketches:
         ops_nm = operands.get(name, {})
+        init = ops_nm.get("init")
         if isinstance(spec, MinHashSpec):
-            out[name] = minhash_reduce(h, valid, ops_nm["a"], ops_nm["b"])
+            out[name] = minhash_reduce(h, valid, ops_nm["a"], ops_nm["b"],
+                                       init=init)
         elif isinstance(spec, HLLSpec):
             out[name] = _hll_reduce(h, valid, spec.b,
-                                    spec.resolve_rank_bits(hs))
+                                    spec.resolve_rank_bits(hs), init=init)
         elif isinstance(spec, BloomSpec):
             out[name] = _bloom_reduce(h, hb, valid, ops_nm["bits"],
-                                      spec.k, spec.log2_m)
+                                      spec.k, spec.log2_m, init=init)
         elif isinstance(spec, CountMinSpec):
             out[name] = cms_reduce(h, valid, ops_nm["a"], ops_nm["b"],
-                                   spec.log2_width)
+                                   spec.log2_width, init=init)
         else:  # pragma: no cover - SketchPlan validates spec types
             raise TypeError(f"unknown sketch spec {type(spec)}")
     return out

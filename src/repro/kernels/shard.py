@@ -48,6 +48,13 @@ from repro.kernels.plan import CountMinSpec, HLLSpec, SketchPlan
 
 AXIS = "data"
 
+# the sketch's own merge operator, used to fold a replicated carry into the
+# combined corpus-level ("global" state_kind) output OUTSIDE the shard_map:
+# a replicated carry must not enter the per-shard reduction, or the psum
+# would add it once per shard (HLL's max is idempotent, but CMS counts are
+# not — one rule for both keeps the carry exactly-once by construction)
+_GLOBAL_MERGE = {HLLSpec: jnp.maximum, CountMinSpec: jnp.add}
+
 
 @functools.lru_cache(maxsize=None)
 def _cached_mesh(devices: tuple, d: int) -> Mesh:
@@ -78,14 +85,27 @@ def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, rows),) + ((0, 0),) * (x.ndim - 1))
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "mesh", "ref_path",
-                                             "tile"))
-def _run_sharded(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
-                 x, xb, nw, operands):
-    """shard_map'd executor over the padded (Bp, S) batch (Bp % d == 0)."""
+def sharded_execute(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
+                    x, xb, nw, ws, operands):
+    """shard_map'd executor over the padded (Bp, S) batch (Bp % d == 0).
 
-    def local(x, xb, nw, operands):
-        out = api.execute(plan, x, xb, nw, operands, ref_path, **dict(tile))
+    Traceable (not jitted) so both the jitted :func:`_run_sharded` wrapper
+    and the streaming executor's per-chunk update can embed it in their own
+    jit graphs. Per-sketch ``init`` carries are honored with exactly-once
+    semantics: "row" state (MinHash, Bloom) is row-sharded alongside the
+    batch and rides into the kernel; "global" state (HLL, CMS) is held out
+    of the per-shard pass and folded into the combined output with the
+    sketch's own merge operator.
+    """
+    carry = {}
+    opd = {name: dict(v) for name, v in (operands or {}).items()}
+    for name, spec in plan.sketches:
+        if spec.state_kind == "global" and "init" in opd.get(name, {}):
+            carry[name] = (opd[name].pop("init"), _GLOBAL_MERGE[type(spec)])
+
+    def local(x, xb, nw, ws, operands):
+        out = api.execute(plan, x, xb, nw, operands, ref_path, w_start=ws,
+                          **dict(tile))
         for name, spec in plan.sketches:
             if isinstance(spec, HLLSpec):
                 # the HLL merge operator IS elementwise max, so one pmax
@@ -99,19 +119,31 @@ def _run_sharded(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
         return out
 
     row = P(AXIS)
-    corpus_level = (HLLSpec, CountMinSpec)
-    out_specs = {name: P() if isinstance(spec, corpus_level) else row
+    out_specs = {name: P() if spec.state_kind == "global" else row
                  for name, spec in plan.sketches}
-    op_specs = jax.tree_util.tree_map(lambda _: P(), operands)
-    return shard_map(
+    op_specs = {name: {k: (row if k == "init" else P()) for k in v}
+                for name, v in opd.items()}
+    out = shard_map(
         local, mesh=mesh,
-        in_specs=(row, row if xb is not None else None, row, op_specs),
-        out_specs=out_specs, check_rep=False)(x, xb, nw, operands)
+        in_specs=(row, row if xb is not None else None, row,
+                  row if ws is not None else None, op_specs),
+        out_specs=out_specs, check_rep=False)(x, xb, nw, ws, opd)
+    for name, (init, merge) in carry.items():
+        out[name] = merge(out[name], init)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "mesh", "ref_path",
+                                             "tile"))
+def _run_sharded(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
+                 x, xb, nw, ws, operands):
+    return sharded_execute(plan, mesh, ref_path, tile, x, xb, nw, ws,
+                           operands)
 
 
 def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
                 n_windows=None, operands=None, impl: str = "auto",
-                mesh: Optional[Mesh] = None,
+                w_start=None, mesh: Optional[Mesh] = None,
                 data_shards: Optional[int] = None,
                 **tile_kw) -> Dict[str, jnp.ndarray]:
     """Multi-device :func:`repro.kernels.api.run`; same arguments, same
@@ -133,22 +165,30 @@ def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
     if len(mesh.axis_names) != 1:
         raise ValueError(f"run_sharded needs a 1-D data mesh, got axes "
                          f"{mesh.axis_names}")
-    x, xb, nw, operands, lead, ref_path = api.validate(
-        plan, h1v, h1v_b, n_windows, operands, impl)
+    x, xb, nw, ws, operands, lead, ref_path = api.validate(
+        plan, h1v, h1v_b, n_windows, operands, impl, w_start)
     B = x.shape[0]
     d = mesh.devices.size
     pad = -B % d
     if pad:
         # padded rows are fully masked (n_windows=0): sentinel MinHash rows
         # and zero Bloom counts are sliced off below; HLL contributions are
-        # rank 0, which never wins a register max
+        # rank 0, which never wins a register max. Row-level carries pad
+        # alongside their rows (the pad values are sliced off with them).
         x = _pad_rows(x, pad)
         if xb is not None:
             xb = _pad_rows(xb, pad)
         nw = jnp.pad(nw, (0, pad))
+        if ws is not None:
+            ws = jnp.pad(ws, (0, pad))
+        operands = {name: dict(v) for name, v in operands.items()}
+        for name, spec in plan.sketches:
+            if spec.state_kind == "row" and "init" in operands.get(name, {}):
+                operands[name]["init"] = _pad_rows(operands[name]["init"],
+                                                   pad)
     tile = tuple(sorted(tile_kw.items()))
-    out = _run_sharded(plan, mesh, ref_path, tile, x, xb, nw, operands)
-    out = {name: (out[name] if isinstance(spec, (HLLSpec, CountMinSpec))
+    out = _run_sharded(plan, mesh, ref_path, tile, x, xb, nw, ws, operands)
+    out = {name: (out[name] if spec.state_kind == "global"
                   else out[name][:B])
            for name, spec in plan.sketches}
     return api.shape_outputs(plan, out, lead)

@@ -130,10 +130,15 @@ def _tile_window_hashes(x, halo_src, *, hs: HashSpec, block_s: int):
     return acc
 
 
-def _valid_mask(nw_col, j, shape):
-    """(block_b, block_s) bool: window's global index < its row's count."""
+def _valid_mask(nw_col, ws_col, j, shape):
+    """(block_b, block_s) bool: window's global index in the row's valid
+    range ``[w_start, n_windows)`` (``ws_col=None`` means 0 — the
+    non-streaming paths, where validity is a pure prefix)."""
     widx = j * shape[1] + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
-    return widx < nw_col
+    ok = widx < nw_col
+    if ws_col is not None:
+        ok &= widx >= ws_col
+    return ok
 
 
 # ---------------------------------------------------------------------------
@@ -141,10 +146,14 @@ def _valid_mask(nw_col, j, shape):
 # ---------------------------------------------------------------------------
 
 
-def _minhash_tile(h, valid, a_ref, b_ref, o_ref, acc_ref, j):
+def _minhash_tile(h, valid, a_ref, b_ref, o_ref, acc_ref, j, init_ref=None):
     @pl.when(j == 0)
     def _init():
-        acc_ref[...] = jnp.full_like(acc_ref, _SENTINEL)
+        # carry-in scratch init: a chunked/streaming caller seeds the
+        # accumulator with its running state instead of the identity, so
+        # the grid reduction continues the stream's min exactly
+        acc_ref[...] = (jnp.full_like(acc_ref, _SENTINEL)
+                        if init_ref is None else init_ref[...])
 
     # lane-tiled two-pass remix: pass 1 walks the k signature lanes in
     # _MINHASH_LANE_TILE-wide chunks — each chunk remixes the tile's hashes
@@ -174,10 +183,12 @@ def _minhash_tile(h, valid, a_ref, b_ref, o_ref, acc_ref, j):
         o_ref[...] = acc_ref[...]
 
 
-def _hll_tile(h, valid, b: int, rank_bits: int, o_ref, acc_ref, bi, j):
+def _hll_tile(h, valid, b: int, rank_bits: int, o_ref, acc_ref, bi, j,
+              init_ref=None):
     @pl.when((bi == 0) & (j == 0))
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] = (jnp.zeros_like(acc_ref) if init_ref is None
+                        else init_ref[...])
 
     hf = h.reshape(-1)
     vf = valid.reshape(-1)
@@ -198,17 +209,20 @@ def _hll_tile(h, valid, b: int, rank_bits: int, o_ref, acc_ref, bi, j):
         o_ref[...] = acc_ref[...]
 
 
-def _cms_tile(h, valid, a_ref, b_ref, log2_width: int, o_ref, acc_ref, bi, j):
+def _cms_tile(h, valid, a_ref, b_ref, log2_width: int, o_ref, acc_ref, bi, j,
+              init_ref=None):
     """Depth-major in-kernel CountMin histogram: row d's partial counts are
     a one-hot accumulation of the tile's remixed column indices, chunked
     into ``_CMS_ROW_TILE``-row one-hot tiles so the live VMEM tile is
     (row_tile, width) regardless of block_b/block_s. Counts are additive,
     so the (depth, width) scratch reduces across the WHOLE grid (batch
-    blocks too, like HLL): init at the very first grid step, flush at the
-    very last. Invalid (padded) windows add 0."""
+    blocks too, like HLL): init at the very first grid step (from the
+    carry-in table when one is given), flush at the very last. Invalid
+    (padded) windows add 0."""
     @pl.when((bi == 0) & (j == 0))
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] = (jnp.zeros_like(acc_ref) if init_ref is None
+                        else init_ref[...])
 
     hf = h.reshape(-1)
     vf = valid.reshape(-1).astype(jnp.int32)
@@ -231,10 +245,12 @@ def _cms_tile(h, valid, a_ref, b_ref, log2_width: int, o_ref, acc_ref, bi, j):
         o_ref[...] = acc_ref[...]
 
 
-def _bloom_tile(h, hb, valid, bits_ref, k: int, log2_m: int, o_ref, acc_ref, j):
+def _bloom_tile(h, hb, valid, bits_ref, k: int, log2_m: int, o_ref, acc_ref, j,
+                init_ref=None):
     @pl.when(j == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] = (jnp.zeros_like(acc_ref) if init_ref is None
+                        else init_ref[...])
 
     hb = hb | np.uint32(1)                              # odd probe stride
     bits = bits_ref[...]
@@ -260,12 +276,17 @@ def _bloom_tile(h, hb, valid, bits_ref, k: int, log2_m: int, o_ref, acc_ref, j):
 # ---------------------------------------------------------------------------
 
 
-def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
+def _plan_kernel(*refs, plan: SketchPlan, block_s: int, has_ws: bool,
+                 init_flags):
     hs = plan.hash
     specs = plan.sketches
-    opcounts = [len(spec.operand_names) for _, spec in specs]
+    # per-sketch kernel inputs: the spec's declared operands, then (when the
+    # caller passed a carry) its `init` state — init_flags is the static
+    # presence vector (CMS-scatter carries fold in the XLA epilogue instead)
+    opcounts = [len(spec.operand_names) + int(f)
+                for (_, spec), f in zip(specs, init_flags)]
     needs_b = plan.needs_second_stream
-    n_in = 2 + (2 if needs_b else 0) + 1 + sum(opcounts)
+    n_in = 2 + (2 if needs_b else 0) + 1 + int(has_ws) + sum(opcounts)
     ns = len(specs)
     in_refs = refs[:n_in]
     out_refs = refs[n_in : n_in + ns]
@@ -278,6 +299,10 @@ def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
         pos = 4
     nw_ref = in_refs[pos]
     pos += 1
+    ws_ref = None
+    if has_ws:
+        ws_ref = in_refs[pos]
+        pos += 1
     op_refs = []
     for c in opcounts:
         op_refs.append(in_refs[pos : pos + c])
@@ -288,23 +313,26 @@ def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
     mask = np.uint32(hs.hash_mask)
     # ONE rolling-hash evaluation per tile, shared by every epilogue below
     h = _tile_window_hashes(x, xh_ref[...], hs=hs, block_s=block_s) & mask
-    valid = _valid_mask(nw_ref[...], j, x.shape)
+    valid = _valid_mask(nw_ref[...], ws_ref[...] if has_ws else None, j,
+                        x.shape)
     hb = None
     if needs_b:
         hb = _tile_window_hashes(xb_ref[...], xbh_ref[...], hs=hs,
                                  block_s=block_s) & mask
 
-    for (name, spec), o_ref, acc_ref, oprs in zip(specs, out_refs, acc_refs,
-                                                  op_refs):
+    for (name, spec), o_ref, acc_ref, oprs, has_init in zip(
+            specs, out_refs, acc_refs, op_refs, init_flags):
+        init_ref = oprs[-1] if has_init else None
         if isinstance(spec, MinHashSpec):
-            _minhash_tile(h, valid, oprs[0], oprs[1], o_ref, acc_ref, j)
+            _minhash_tile(h, valid, oprs[0], oprs[1], o_ref, acc_ref, j,
+                          init_ref)
         elif isinstance(spec, HLLSpec):
             _hll_tile(h, valid, spec.b, spec.resolve_rank_bits(hs), o_ref,
-                      acc_ref, bi, j)
+                      acc_ref, bi, j, init_ref)
         elif isinstance(spec, CountMinSpec):
             if spec.use_in_kernel:
                 _cms_tile(h, valid, oprs[0], oprs[1], spec.log2_width,
-                          o_ref, acc_ref, bi, j)
+                          o_ref, acc_ref, bi, j, init_ref)
             else:
                 # table too wide for VMEM scratch: emit the tile's masked
                 # window hashes; the XLA scatter-add epilogue (same jit
@@ -312,7 +340,7 @@ def _plan_kernel(*refs, plan: SketchPlan, block_s: int):
                 o_ref[...] = h
         else:
             _bloom_tile(h, hb, valid, oprs[0], spec.k, spec.log2_m, o_ref,
-                        acc_ref, j)
+                        acc_ref, j, init_ref)
 
 
 def _budget_cap(lanes: int, block_b: int, n: int) -> int:
@@ -351,8 +379,9 @@ def _resolve_block_s(plan: SketchPlan, S: int, block_b: int, block_s):
 @functools.partial(jax.jit, static_argnames=("plan", "block_b", "block_s",
                                              "interpret"))
 def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
-                      operands, *, plan: SketchPlan, block_b: int = 8,
-                      block_s: int = None, interpret: bool = False) -> dict:
+                      operands, *, plan: SketchPlan, w_start=None,
+                      block_b: int = 8, block_s: int = None,
+                      interpret: bool = False) -> dict:
     """Execute every sketch in ``plan`` in ONE rolling-hash device pass.
 
     h1v (B, S) uint32, h1v_b (B, S) or None (required iff the plan holds a
@@ -362,6 +391,14 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
     CountMin (depth, 2^log2_width) int32 batch partial counts (in VMEM
     scratch up to the spec's ``in_kernel_max_log2_width``; wider tables are
     scatter-added from kernel-emitted hashes in the same jit graph).
+
+    A sketch's optional ``init`` operand (its ``state_struct`` shape) seeds
+    that sketch's scratch accumulator at the first grid step instead of the
+    identity — the reduction then *continues* a running state, which is what
+    makes the chunked streaming executor bit-exact. ``w_start`` (B,) int32
+    optionally sets the per-row FIRST valid window (the mask becomes the
+    range ``[w_start, n_windows)``), masking windows that would span a
+    stream chunk's zero-filled pre-history.
     """
     assert h1v.ndim == 2 and n_windows.shape == (h1v.shape[0],)
     B, S = h1v.shape
@@ -372,6 +409,7 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
     nw = jnp.pad(n_windows.astype(jnp.int32), (0, Bp - B))[:, None]
     grid = (Bp // block_b, Sp // block_s)
     nsb = grid[1]
+    has_ws = w_start is not None
 
     tile = pl.BlockSpec((block_b, block_s), lambda bi, j: (bi, j),
                         memory_space=pltpu.VMEM)
@@ -392,18 +430,37 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
         inputs += [xb, xb]
     in_specs.append(row(1))
     inputs.append(nw)
+    ws = None
+    if has_ws:
+        assert w_start.shape == (B,)
+        ws = jnp.pad(w_start.astype(jnp.int32), (0, Bp - B))[:, None]
+        in_specs.append(row(1))
+        inputs.append(ws)
 
+    init_flags = []
     out_specs, out_shapes, scratches = [], [], []
     for name, spec in plan.sketches:
         ops_nm = operands.get(name, {}) if operands else {}
+        # the carry rides into the kernel for every reduction epilogue; the
+        # CMS scatter fallback folds it in its XLA epilogue below instead
+        has_init = "init" in ops_nm and not (
+            isinstance(spec, CountMinSpec) and not spec.use_in_kernel)
+        init_flags.append(has_init)
         if isinstance(spec, MinHashSpec):
             in_specs += [flat(spec.k), flat(spec.k)]
             inputs += [ops_nm["a"].astype(_U32), ops_nm["b"].astype(_U32)]
+            if has_init:
+                in_specs.append(row(spec.k))
+                inputs.append(jnp.pad(ops_nm["init"].astype(_U32),
+                                      ((0, Bp - B), (0, 0))))
             out_specs.append(row(spec.k))
             out_shapes.append(jax.ShapeDtypeStruct((Bp, spec.k), _U32))
             scratches.append(pltpu.VMEM((block_b, spec.k), _U32))
         elif isinstance(spec, HLLSpec):
             m = 1 << spec.b
+            if has_init:
+                in_specs.append(flat(m))
+                inputs.append(ops_nm["init"].astype(jnp.int32))
             out_specs.append(flat(m))
             out_shapes.append(jax.ShapeDtypeStruct((m,), jnp.int32))
             scratches.append(pltpu.VMEM((m,), jnp.int32))
@@ -411,9 +468,13 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
             in_specs += [flat(spec.depth), flat(spec.depth)]
             inputs += [ops_nm["a"].astype(_U32), ops_nm["b"].astype(_U32)]
             if spec.use_in_kernel:
-                out_specs.append(pl.BlockSpec(
+                table_spec = pl.BlockSpec(
                     (spec.depth, spec.width), lambda bi, j: (0, 0),
-                    memory_space=pltpu.VMEM))
+                    memory_space=pltpu.VMEM)
+                if has_init:
+                    in_specs.append(table_spec)
+                    inputs.append(ops_nm["init"].astype(jnp.int32))
+                out_specs.append(table_spec)
                 out_shapes.append(
                     jax.ShapeDtypeStruct((spec.depth, spec.width), jnp.int32))
                 scratches.append(pltpu.VMEM((spec.depth, spec.width),
@@ -430,12 +491,17 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
             # full filter resident per grid step
             in_specs.append(flat(spec.n_words))
             inputs.append(ops_nm["bits"].astype(_U32))
+            if has_init:
+                in_specs.append(row(1))
+                inputs.append(jnp.pad(ops_nm["init"].astype(jnp.int32),
+                                      (0, Bp - B))[:, None])
             out_specs.append(row(1))
             out_shapes.append(jax.ShapeDtypeStruct((Bp, 1), jnp.int32))
             scratches.append(pltpu.VMEM((block_b, 1), jnp.int32))
 
     outs = pl.pallas_call(
-        functools.partial(_plan_kernel, plan=plan, block_s=block_s),
+        functools.partial(_plan_kernel, plan=plan, block_s=block_s,
+                          has_ws=has_ws, init_flags=tuple(init_flags)),
         grid=grid,
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -456,13 +522,18 @@ def sketch_plan_fused(h1v: jnp.ndarray, h1v_b, n_windows: jnp.ndarray,
             else:
                 # XLA scatter-add over the kernel-emitted hashes; validity
                 # re-derived from the padded n_windows exactly as in-kernel
-                # (padded rows have nw=0, out-of-range columns are >= nw)
+                # (padded rows have nw=0, out-of-range columns are >= nw),
+                # and the carry-in table (if any) seeds the scatter
                 ops_nm = operands.get(name, {}) if operands else {}
                 idx = jnp.arange(Sp, dtype=jnp.int32)
                 valid = idx[None, :] < nw
+                if has_ws:
+                    valid &= idx[None, :] >= ws
+                init = ops_nm.get("init")
                 results[name] = _kref.cms_reduce(
                     o, valid, ops_nm["a"].astype(_U32),
-                    ops_nm["b"].astype(_U32), spec.log2_width)
+                    ops_nm["b"].astype(_U32), spec.log2_width,
+                    init=None if init is None else init.astype(jnp.int32))
         else:
             results[name] = o[:B, 0]
     return results

@@ -1,0 +1,340 @@
+"""Chunked streaming executor: one compiled shape, cross-chunk carry.
+
+The paper's recursive families make n-gram hashing a *streaming* operation —
+O(1) work per symbol with constant state — and Lemire & Kaser's companion
+work ("One-Pass, One-Hash n-Gram Statistics Estimation") frames every sketch
+this engine runs as a single pass over unbounded input. This module gives
+the data-plane that shape: :func:`update` drives the existing fused plan
+kernel over fixed ``(B, chunk_S)`` tiles with an explicit **carry**, so any
+stream length — ragged corpora, documents longer than a device buffer,
+genuinely unbounded token feeds — flows through ONE compiled executor
+instead of one jit shape per length bucket.
+
+How a chunk becomes windows, exactly once:
+
+* The carry holds each row's last ``n-1`` consumed h1 values (``tail``).
+  A chunk is hashed as ``concat([tail, chunk])`` — shape ``(B, n-1+C)`` —
+  so the ``C`` windows of that array are precisely the windows *ending at*
+  this chunk's symbols::
+
+      tail (n-1)   chunk (C)
+      [t t t t t | c0 c1 c2 ...]     window j spans x[j : j+n]
+                                     and ends at chunk symbol j
+
+  A boundary-spanning window is hashed in exactly one chunk (the one its
+  last symbol lands in); no window is hashed twice.
+* At the very start of a stream the tail is zero-filled history that no
+  window may span: the per-row ``w_start = max(0, n-1 - seen)`` lower mask
+  bound (threaded through ``api.execute`` into the kernels) excludes those
+  leading windows, where ``seen`` saturates at ``n-1`` — constant state, as
+  the paper promises.
+* Every sketch's state rides the carry through its ``init`` operand and is
+  folded with its own merge operator inside the kernel scratch (MinHash
+  per-row running min, HLL register max, Bloom hit-count add, CountMin
+  table add) — all exact on integers, so a chunked run is bit-identical to
+  one-shot :func:`repro.kernels.api.run`.
+* The per-chunk update is one jitted call with the carried state **donated**
+  (``jax.jit(donate_argnums=...)``): in steady state the tail/seen/sketch
+  buffers are reused in place instead of reallocated per chunk.
+
+Rows advance independently: per-chunk ``lengths`` mark how many of a row's
+chunk symbols are real, a row whose stream has ended just submits 0, and an
+idle row's tail is preserved verbatim (the tail refresh gathers at the
+row's own fill level), so ragged document batches and multi-tenant streams
+share one executor shape.
+
+Sharding composes: pass ``mesh``/``data_shards`` and every chunk update runs
+the plan under ``shard_map`` on the data mesh (row state sharded with the
+rows, corpus-level state merged exactly once outside the per-shard pass) —
+bit-identical at any device count.
+
+Entry points:
+
+* :func:`init_state` / :func:`update` / :func:`finalize` — the stateful
+  API for unbounded streams (stats/decontam telemetry).
+* :func:`run_stream` — a drop-in chunked ``api.run``: same arguments plus
+  ``chunk_s``, same outputs, one compiled shape for any S.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import api, shard
+from repro.kernels.plan import SketchPlan
+
+# backends whose runtime implements buffer donation; elsewhere "auto" skips
+# the request (XLA would silently ignore it — harmless, but explicit beats
+# a warning per compile on older jaxlibs)
+_DONATABLE_BACKENDS = ("tpu", "gpu")
+
+
+def _resolve_donate(donate) -> bool:
+    if donate in (None, "auto"):
+        return jax.default_backend() in _DONATABLE_BACKENDS
+    return bool(donate)
+
+
+def _resolve_mesh(mesh, data_shards):
+    if mesh is None and data_shards is None:
+        return None
+    if mesh is None:
+        mesh = shard.data_mesh(data_shards)
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"streaming needs a 1-D data mesh, got axes "
+                         f"{mesh.axis_names}")
+    return mesh
+
+
+def state_batch(plan: SketchPlan, state: Dict) -> int:
+    """The (possibly shard-padded) batch size a stream state was built for."""
+    return state["seen"].shape[0]
+
+
+def init_state(plan: SketchPlan, batch: int, *, carry: Optional[Dict] = None,
+               mesh=None, data_shards: Optional[int] = None) -> Dict:
+    """Fresh carry for ``batch`` parallel streams under ``plan``.
+
+    The state is a flat pytree of device arrays (donate-able, checkpoint-
+    able): ``tail`` (B, n-1) uint32 last-consumed h1 values (plus ``tail_b``
+    for Bloom plans' second stream), ``seen`` (B,) int32 consumed-symbol
+    count saturating at ``n-1`` (constant state: only the window-completion
+    threshold matters), and ``sketch`` — one array per sketch, at the
+    sketch's identity (sentinel minima / zero registers / zero counts) or
+    seeded from ``carry[name]`` to continue existing state.
+
+    With ``mesh``/``data_shards`` the batch is padded up to a multiple of
+    the shard count (padded rows never submit symbols); pass the same mesh
+    to every :func:`update` and :func:`finalize` slices the pads off.
+    """
+    if not isinstance(plan, SketchPlan):
+        raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    mesh = _resolve_mesh(mesh, data_shards)
+    Bp = batch if mesh is None else batch + (-batch % mesh.devices.size)
+    n = plan.hash.n
+    state = {"tail": jnp.zeros((Bp, n - 1), jnp.uint32),
+             "seen": jnp.zeros((Bp,), jnp.int32)}
+    if plan.needs_second_stream:
+        state["tail_b"] = jnp.zeros((Bp, n - 1), jnp.uint32)
+    sketch = {}
+    carry = carry or {}
+    unknown = set(carry) - set(plan.names)
+    if unknown:
+        raise ValueError(f"carry for sketches not in plan: {sorted(unknown)}")
+    for name, spec in plan.sketches:
+        shape, dtype, fill = spec.state_struct(Bp)
+        if name in carry:
+            got = jnp.asarray(carry[name], dtype)
+            want = spec.state_struct(batch)[0]
+            if got.shape != want:
+                raise ValueError(
+                    f"carry[{name!r}] shape {got.shape} != state shape {want}")
+            if Bp != batch and spec.state_kind == "row":
+                pad = jnp.full((Bp - batch,) + want[1:], fill, dtype)
+                got = jnp.concatenate([got, pad], axis=0)
+            sketch[name] = got
+        else:
+            sketch[name] = jnp.full(shape, fill, dtype)
+    state["sketch"] = sketch
+    return state
+
+
+def _update_body(plan, ref_path, mesh, tile, state, chunk, chunk_b, lengths,
+                 operands):
+    """One chunk through the fused engine, carry in / carry out."""
+    hs = plan.hash
+    n = hs.n
+    seen = state["seen"]
+    # the clip backstops traced callers the concrete check can't see
+    v = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, chunk.shape[1])
+
+    def cat(tail, c):
+        c = c.astype(jnp.uint32)
+        return jnp.concatenate([tail, c], axis=1) if n > 1 else c
+
+    x = cat(state["tail"], chunk)
+    xb = cat(state["tail_b"], chunk_b) if "tail_b" in state else None
+    # window j of x ends at chunk symbol j: valid iff that symbol is real
+    # (j < v) and the window's history is (j >= n-1 - seen, i.e. it does not
+    # reach into the zero-filled pre-stream tail)
+    nw = v
+    ws = jnp.maximum(np.int32(n - 1) - seen, 0)
+    operands = {name: dict(operands.get(name, {}))
+                for name, _ in plan.sketches}
+    for name, _ in plan.sketches:
+        operands[name]["init"] = state["sketch"][name]
+    if mesh is None:
+        out = api.execute(plan, x, xb, nw, operands, ref_path, w_start=ws,
+                          **dict(tile))
+    else:
+        out = shard.sharded_execute(plan, mesh, ref_path, tile, x, xb, nw,
+                                    ws, operands)
+
+    # tail refresh: the last n-1 *consumed* symbols end at the row's fill
+    # level, so gather columns [v, v + n-1) of x — for an idle row (v = 0)
+    # that is exactly the old tail, preserved verbatim
+    new = {"seen": jnp.minimum(seen + v, np.int32(n - 1))}
+    if n > 1:
+        cols = v[:, None] + jnp.arange(n - 1, dtype=jnp.int32)[None, :]
+        new["tail"] = jnp.take_along_axis(x, cols, axis=1)
+        if xb is not None:
+            new["tail_b"] = jnp.take_along_axis(xb, cols, axis=1)
+    else:
+        new["tail"] = state["tail"]
+        if "tail_b" in state:
+            new["tail_b"] = state["tail_b"]
+    new["sketch"] = {name: out[name] for name, _ in plan.sketches}
+    return new
+
+
+# two jit twins so the donation choice is a dispatch decision, not a trace
+# key hack: state (arg 4) is donated in the steady-state loop, and both
+# expose _cache_size() for the no-retrace regression tests
+_update_plain = jax.jit(
+    _update_body, static_argnums=(0, 1, 2, 3))
+_update_donated = jax.jit(
+    _update_body, static_argnums=(0, 1, 2, 3), donate_argnums=(4,))
+
+
+def update(plan: SketchPlan, state: Dict, chunk, *, chunk_b=None,
+           lengths=None, operands=None, impl: str = "auto", donate="auto",
+           mesh=None, data_shards: Optional[int] = None,
+           **tile_kw) -> Dict:
+    """Fold one ``(B, C)`` h1 chunk into the stream carry; returns the new
+    carry (same shapes/dtypes — with donation the buffers are reused).
+
+    Args:
+      plan: the :class:`SketchPlan` the state was initialised for.
+      state: carry from :func:`init_state` / a previous :func:`update`.
+        When donation is active the passed-in state is consumed.
+      chunk: (B, C) uint32 h1-mapped values, any fixed C >= 1 (each distinct
+        C is one compiled shape; keep it constant for a single-trace loop).
+      chunk_b: second family draw's chunk, required iff the plan has a
+        BloomSpec.
+      lengths: (B,) count of *real* symbols per row in this chunk (default:
+        all C). Rows advance independently; finished or idle rows submit 0
+        and their carry rides through untouched.
+      operands: the per-sketch runtime operands of ``api.run`` (remix lanes,
+        packed filter, CMS constants) — WITHOUT ``init``; the carry supplies
+        every sketch's state.
+      donate: True/False/"auto" — donate the carry buffers to the update
+        (auto: on for backends with donation support).
+      mesh / data_shards: run the chunk under ``shard_map`` on the 1-D data
+        mesh the state was initialised with.
+    """
+    mesh = _resolve_mesh(mesh, data_shards)
+    ref_path = api.use_ref(impl)
+    chunk = jnp.asarray(chunk)
+    if chunk.ndim != 2:
+        raise ValueError(f"chunk must be (B, C), got shape {chunk.shape}")
+    B, C = chunk.shape
+    Bp = state_batch(plan, state)
+    if B > Bp:
+        raise ValueError(f"chunk rows {B} > stream state rows {Bp}")
+    for name in (operands or {}):
+        if "init" in (operands[name] or {}):
+            raise ValueError(
+                f"sketch {name!r}: do not pass 'init' to stream.update — "
+                f"the stream carry supplies every sketch's state")
+    operands = api._check_operands(plan, operands, None)
+    if plan.needs_second_stream:
+        if chunk_b is None:
+            raise ValueError("plan contains a BloomSpec: the double-hashing "
+                             "probe stride needs a second stream chunk_b")
+        chunk_b = jnp.asarray(chunk_b)
+        if chunk_b.shape != chunk.shape:
+            raise ValueError(f"chunk_b shape {chunk_b.shape} != chunk shape "
+                             f"{chunk.shape}")
+    elif chunk_b is not None:
+        raise ValueError("chunk_b given but no sketch in the plan consumes "
+                         "a second hash stream")
+    if lengths is None:
+        lengths = jnp.full((B,), C, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32).reshape(-1)
+        if lengths.shape != (B,):
+            raise ValueError(f"lengths shape {lengths.shape} != batch ({B},)")
+        # out-of-range lengths silently corrupt downstream state — negative
+        # drives `seen` backwards and re-gathers the tail at wrong columns,
+        # oversize desyncs callers' own symbol accounting (e.g. decontam's
+        # window totals) from the clipped count the engine actually consumes
+        api.check_row_counts(lengths, "lengths", upper=C)
+    if B < Bp:            # shard padding rows: no symbols, carry untouched
+        chunk = jnp.pad(chunk, ((0, Bp - B), (0, 0)))
+        if chunk_b is not None:
+            chunk_b = jnp.pad(chunk_b, ((0, Bp - B), (0, 0)))
+        lengths = jnp.pad(lengths, (0, Bp - B))
+    tile = tuple(sorted(tile_kw.items()))
+    fn = _update_donated if _resolve_donate(donate) else _update_plain
+    return fn(plan, ref_path, mesh, tile, state, chunk, chunk_b, lengths,
+              operands)
+
+
+def finalize(plan: SketchPlan, state: Dict,
+             batch: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Extract the sketch results from a stream carry — the same outputs
+    one-shot ``api.run`` would have produced over the concatenated stream.
+    ``batch`` slices shard-padding rows off per-row ("row" state) outputs.
+    """
+    out = {}
+    for name, spec in plan.sketches:
+        o = state["sketch"][name]
+        if batch is not None and spec.state_kind == "row":
+            o = o[:batch]
+        out[name] = o
+    return out
+
+
+def run_stream(plan: SketchPlan, h1v, *, chunk_s: int, h1v_b=None,
+               n_windows=None, operands=None, impl: str = "auto",
+               donate="auto", mesh=None, data_shards: Optional[int] = None,
+               **tile_kw) -> Dict[str, jnp.ndarray]:
+    """Chunked drop-in for :func:`repro.kernels.api.run`: identical
+    arguments (plus ``chunk_s``) and bit-identical outputs, but the device
+    only ever sees fixed ``(B, chunk_s + n - 1)`` tiles — ONE compiled
+    executor for any sequence length, and O(B * chunk_s) live memory
+    regardless of S.
+
+    A host-side loop feeds ``ceil(S / chunk_s)`` chunks through
+    :func:`update` with the carry donated between chunks. Not meaningfully
+    jit-able from outside (it is already a loop of jitted calls).
+    """
+    if chunk_s < 1:
+        raise ValueError(f"chunk_s must be >= 1, got {chunk_s}")
+    if not isinstance(plan, SketchPlan):
+        raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
+    n = plan.hash.n
+    x, lead = api.flatten(jnp.asarray(h1v))
+    B, S = x.shape
+    xb = None
+    if h1v_b is not None:
+        xb, _ = api.flatten(jnp.asarray(h1v_b))
+        if xb.shape != x.shape:
+            raise ValueError(f"h1v_b shape {xb.shape} != h1v shape {x.shape}")
+    # api.run's n_windows contract (count of valid windows) -> per-row
+    # symbol budget: nw valid windows consume nw + n - 1 leading symbols
+    nw = api.norm_windows(n_windows, B, max(0, S - n + 1))
+    sym = jnp.where(nw > 0, nw + np.int32(n - 1), 0)
+    state = init_state(plan, B, mesh=mesh, data_shards=data_shards)
+    n_chunks = max(1, -(-S // chunk_s))
+    for c in range(n_chunks):
+        lo = c * chunk_s
+        ck = x[:, lo : lo + chunk_s]
+        ckb = xb[:, lo : lo + chunk_s] if xb is not None else None
+        if ck.shape[1] < chunk_s:       # ragged tail: same compiled shape
+            pad = chunk_s - ck.shape[1]
+            ck = jnp.pad(ck, ((0, 0), (0, pad)))
+            if ckb is not None:
+                ckb = jnp.pad(ckb, ((0, 0), (0, pad)))
+        lengths = jnp.clip(sym - np.int32(lo), 0, np.int32(chunk_s))
+        state = update(plan, state, ck, chunk_b=ckb, lengths=lengths,
+                       operands=operands, impl=impl, donate=donate,
+                       mesh=mesh, data_shards=data_shards, **tile_kw)
+    out = finalize(plan, state, batch=B)
+    return api.shape_outputs(plan, out, lead)

@@ -7,11 +7,13 @@
 #   real multi-device partitioning instead of silently collapsing to 1.
 #
 # --quick — kernel/plan parity tests only (the hash->sketch data-plane,
-#   including the CountMin parity leg): fast signal when iterating on
-#   kernels/, skipping the model/train/serve suites.
+#   including the CountMin parity leg and the chunked streaming executor):
+#   fast signal when iterating on kernels/, skipping the model/train/serve
+#   suites.
 #
 # --dist — the multi-device suites only: run_sharded vs api.run parity at
-#   1/2/4/8 virtual devices (tests/test_shard.py) plus the sharded-train
+#   1/2/4/8 virtual devices (tests/test_shard.py), the sharded-streaming
+#   parity subset (tests/test_stream_sharded.py), plus the sharded-train
 #   mesh tests, under the 8-virtual-device XLA flag.
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -20,11 +22,11 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 if [[ "${1:-}" == "--quick" ]]; then
   shift
   exec python -m pytest -x -q tests/test_kernels.py tests/test_sketch_fused.py \
-    tests/test_plan_api.py tests/test_countmin.py "$@"
+    tests/test_plan_api.py tests/test_countmin.py tests/test_stream.py "$@"
 fi
 if [[ "${1:-}" == "--dist" ]]; then
   shift
   exec python -m pytest -x -q tests/test_shard.py tests/test_countmin.py \
-    tests/test_distributed.py "$@"
+    tests/test_stream_sharded.py tests/test_distributed.py "$@"
 fi
 exec python -m pytest -x -q "$@"

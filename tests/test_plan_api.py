@@ -222,8 +222,6 @@ def test_run_validation_errors():
     plan = SketchPlan(HashSpec(n=8), (("sig", MinHashSpec(k=8)),))
     with pytest.raises(ValueError, match="unknown impl"):
         api.run(plan, x, operands={"sig": dict(p)}, impl="tpu")
-    with pytest.raises(ValueError, match="sequence length 4 < window n=8"):
-        api.run(plan, _h1v((2, 4)), operands={"sig": dict(p)})
     with pytest.raises(ValueError, match="needs operands"):
         api.run(plan, x)
     with pytest.raises(ValueError, match="not in plan"):
@@ -237,6 +235,28 @@ def test_run_validation_errors():
         api.run(plan, x, h1v_b=x, operands={"sig": dict(p)})
     with pytest.raises(ValueError, match="packed filter shape"):
         api.run(bplan, x, h1v_b=x, operands={"dec": {"bits": _h1v((7,))}})
+    with pytest.raises(ValueError, match="n_windows must be non-negative"
+                                         ".*row 1 has -3"):
+        api.run(plan, x, n_windows=jnp.array([2, -3]),
+                operands={"sig": dict(p)})
+    with pytest.raises(ValueError, match="init carry shape"):
+        api.run(plan, x, operands={"sig": {**p, "init": _h1v((3, 8))}})
+
+
+@pytest.mark.parametrize("impl,tile", IMPLS)
+def test_short_rows_are_legal_masked_batches(impl, tile):
+    # the S < n satellite: a short row is a legal padded/chunked batch
+    # member with n_windows = 0 — every sketch returns its identity
+    # (sentinel minima / empty registers) instead of raising
+    plan = _plan("cyclic", 8)
+    p = _mh_params(32)
+    x, xb = _h1v((2, 4)), _h1v((2, 4), seed=9)
+    ops_ = {"sig": dict(p),
+            "dec": {"bits": jnp.zeros((1 << 9,), jnp.uint32)}}
+    out = api.run(plan, x, h1v_b=xb, operands=ops_, impl=impl, **tile)
+    assert (np.asarray(out["sig"]) == 0xFFFFFFFF).all()
+    assert (np.asarray(out["card"]) == 0).all()
+    assert (np.asarray(out["dec"]) == 0).all()
 
 
 def test_cyclic_fused_module_is_a_deprecation_shim():

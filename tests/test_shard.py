@@ -254,8 +254,11 @@ def test_mesh_validation():
         twod = Mesh(np.array(jax.devices()[:2]).reshape(2, 1), ("a", "b"))
         with pytest.raises(ValueError, match="1-D data mesh"):
             shard.run_sharded(plan, _h1v((2, 64)), operands=ops, mesh=twod)
-    # the shared validation front end raises the same errors as api.run
-    with pytest.raises(ValueError, match="sequence length 4 < window n=8"):
-        shard.run_sharded(plan, _h1v((2, 4)), operands=ops, data_shards=1)
+    # the shared validation front end behaves exactly like api.run: short
+    # rows are legal fully-masked batches (n_windows = 0), bad operands
+    # raise the same error
+    short = shard.run_sharded(plan, _h1v((2, 4)), operands=ops,
+                              data_shards=1)
+    assert (np.asarray(short["sig"]) == 0xFFFFFFFF).all()
     with pytest.raises(ValueError, match="needs operands"):
         shard.run_sharded(plan, _h1v((2, 64)), data_shards=1)
