@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement) and also
 writes a machine-readable JSON map ``{name: us_per_call}`` so the perf
-trajectory is tracked PR over PR (default ``BENCH_pr2.json`` at the repo
+trajectory is tracked PR over PR (default ``BENCH_pr6.json`` at the repo
 root; override the path with REPRO_BENCH_JSON).
 
 Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
@@ -12,6 +12,13 @@ The shard_scaling section needs multiple devices: if jax has not been
 imported yet and the operator did not pin a device count, 8 virtual CPU
 devices are exposed (the same flag test.sh exports) so the 1/2/4/8 sweep is
 real under a bare ``python benchmarks/run.py``.
+
+Device-bench profile: ``_bench_env`` pins the rest of the exemplar-harness
+environment (32-bit default dtypes, quiet TF logging, tcmalloc large-alloc
+report threshold) before jax is imported, so a bare ``python
+benchmarks/run.py`` measures the same configuration as ``./test.sh --bench``
+on any host. Only the tcmalloc LD_PRELOAD itself must come from the shell
+(test.sh does it) — a process cannot preload into itself.
 """
 from __future__ import annotations
 
@@ -20,14 +27,33 @@ import os
 import sys
 
 
-def main() -> None:
-    # must precede the section imports below (they import jax); kept inside
-    # main() so merely importing this module has no environment side effect
+def _bench_env() -> None:
+    """Pin the measurement environment (idempotent; operator env wins).
+
+    Adapted from the olmax/HomebrewNLP TPU bench harnesses: dtype pinning
+    guards against an x64 leak doubling every buffer mid-sweep, the log
+    level keeps CSV output parseable, and the tcmalloc threshold silences
+    benign large-alloc reports when test.sh preloaded tcmalloc. All are
+    backend-agnostic, so the harness runs unchanged on TPU/GPU hosts."""
+    env = {
+        "JAX_ENABLE_X64": "0",
+        "JAX_DEFAULT_DTYPE_BITS": "32",
+        "TF_CPP_MIN_LOG_LEVEL": "4",
+        "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+    }
+    for k, v in env.items():
+        os.environ.setdefault(k, v)
     if "jax" not in sys.modules:
         _flags = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in _flags:
             os.environ["XLA_FLAGS"] = (
                 "--xla_force_host_platform_device_count=8 " + _flags).strip()
+
+
+def main() -> None:
+    # must precede the section imports below (they import jax); kept inside
+    # main() so merely importing this module has no environment side effect
+    _bench_env()
     from benchmarks import (fig1_speed, pipeline_bench, shard_scaling,
                             sketch_fusion, stats_onepass, stream_scaling,
                             table1_properties)
@@ -73,7 +99,7 @@ def main() -> None:
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr5.json"))
+                     "BENCH_pr6.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

@@ -24,6 +24,7 @@ the trajectory for real-TPU runs.
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import jax
@@ -73,20 +74,30 @@ def _sign_sweep(B: int, S: int):
     return rows
 
 
-def _timed_add_batch(cfg, docs):
-    """Steady-state add_batch time: the deduper's per-instance jit is warmed
-    via signature_many (same trace keys, no index mutation) so the timed
-    region is signing + probing + verify, not trace/compile."""
-    dd = MinHashDeduper(cfg)
-    dd.signature_many(docs)
-    t0 = time.perf_counter()
-    flags = dd.add_batch(docs)
-    dt = time.perf_counter() - t0
-    dd.close()
-    return dt, flags
+def _timed_add_batch(cfg, docs, reps: int = 3):
+    """Steady-state add_batch time: each rep builds a fresh deduper (an
+    add_batch mutates the index, so it cannot repeat on one instance),
+    warms the per-instance jit via signature_many (same trace keys, no
+    index mutation), then times one add_batch with the cyclic GC parked
+    (a collection inside the ~100ms window is pure noise); best-of-``reps``
+    damps what async-dispatch jitter remains."""
+    best, flags = float("inf"), None
+    for _ in range(reps):
+        dd = MinHashDeduper(cfg)
+        dd.signature_many(docs)
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            flags = dd.add_batch(docs)
+            best = min(best, time.perf_counter() - t0)
+        finally:
+            gc.enable()
+        dd.close()
+    return best, flags
 
 
-def _dedup_rows(n_docs: int = 192, doc_len: int = 1024):
+def _dedup_rows(n_docs: int = 512, doc_len: int = 1024):
     rng = np.random.default_rng(0)
     lens = rng.integers(doc_len // 2 + 1, doc_len + 1, size=n_docs)
     docs = [rng.integers(0, 65536, size=int(n)).astype(np.int32)
@@ -97,13 +108,21 @@ def _dedup_rows(n_docs: int = 192, doc_len: int = 1024):
     t1, f1 = _timed_add_batch(cfg1, docs)
     td, fd = _timed_add_batch(cfgd, docs)
     np.testing.assert_array_equal(f1, fd)                       # same flags
+    # the PR 5 regression stays fixed: sharded end-to-end dedup must not be
+    # slower than single-device (the per-chunk shard_map dispatches that
+    # caused the 3.1x inversion are now folded into one scan per block).
+    # 15% headroom: both sides are ~100ms host-loop measurements.
+    assert td <= t1 * 1.15, (
+        f"sharded dedup regressed: d{dmax} {td * 1e3:.1f}ms vs "
+        f"d1 {t1 * 1e3:.1f}ms")
     return [
         {"name": f"shard_dedup_batch_d1_{n_docs}docs",
          "us_per_call": t1 * 1e6, "derived": f"{n_docs / t1:.1f} docs/s"},
         {"name": f"shard_dedup_batch_d{dmax}_{n_docs}docs",
          "us_per_call": td * 1e6,
          "derived": f"{n_docs / td:.1f} docs/s; {t1 / td:.2f}x vs d=1 "
-                    f"(sharded signing + band-sharded LSH probe)"},
+                    f"(scan-executor sharded signing + band-sharded LSH "
+                    f"probe; asserted <= 1.15x d1 time)"},
     ]
 
 
@@ -146,7 +165,7 @@ def _remix_rows(B: int = 8, S: int = 2048):
     return rows
 
 
-def run(n_docs: int = 192, sign_B: int = 256, sign_S: int = 2048,
+def run(n_docs: int = 512, sign_B: int = 256, sign_S: int = 2048,
         scale: float = 1.0):
     """``scale`` (run.py passes REPRO_BENCH_CHARS / 4.3M) shrinks the
     workloads for smoke runs; floors keep every measurement meaningful.
@@ -158,7 +177,10 @@ def run(n_docs: int = 192, sign_B: int = 256, sign_S: int = 2048,
     rows keeps >= 16 rows per shard at d=8 — small enough for smoke, large
     enough that the sweep measures scaling rather than dispatch floor."""
     scale = min(1.0, max(scale, 0.0))
-    n_docs = max(16, int(n_docs * scale))
+    # dedup floor 256: the sharded signing win comes from shard-scaled
+    # groups (stream_rows per shard), which need >= 4 groups' worth of
+    # docs to engage — a smaller smoke corpus would measure the fallback
+    n_docs = max(256, int(n_docs * scale))
     sign_B = max(128, int(sign_B * scale))
     return (_sign_sweep(sign_B, sign_S) + _dedup_rows(n_docs)
             + _remix_rows())

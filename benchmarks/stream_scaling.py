@@ -1,22 +1,26 @@
-"""Chunked streaming executor vs the bucketed data-plane (PR 5).
+"""On-device streaming executors vs host loop vs one-shot (PR 5 / PR 6).
 
 Three measurements, all parity-asserted before timing so a speedup is never
 measured against a semantically different computation:
 
 * **chunked vs bucketed corpus signing** — ``MinHashDeduper`` over a
   mixed-length corpus (log-uniform lengths, the shape-bucket worst case):
-  the streaming path signs everything through ONE compiled ``(rows,
-  chunk_s)`` executor with donated carry, the legacy bucketed path compiles
-  one executor per (length-bucket, row-bucket) shape. Both total time and
-  the observed compile counts are recorded (the compile-count gap is the
-  architectural point; steady-state rows re-run after warmup show the
-  dispatch cost alone).
+  the streaming path block-feeds everything through the on-device scan
+  executor (compile count bounded by log2(block)+1, corpus-independent),
+  the demoted bucketed oracle compiles one executor per (length-bucket,
+  row-bucket) shape. Chunked must dominate bucketed steady-state — asserted,
+  since the demotion (PR 6) rests on it.
 * **donation on vs off** — the steady-state ``stream.update`` loop over a
   long stream with the carry donated vs copied. On CPU the allocator hides
   most of the reuse win; the row records the trajectory for real-TPU runs.
-* **run_stream vs one-shot api.run** — one long (B, S) batch signed whole
-  (one big compile, O(S) live memory) vs streamed in fixed tiles (one small
-  compile, O(chunk) live memory); times the steady state of both.
+* **executor face-off** — one long (B, S) batch signed four ways: one-shot
+  ``api.run`` (one big compile, O(S) live memory), ``run_stream`` with the
+  scan executor (whole stream = ONE dispatch, lax.scan over chunks), the
+  grid executor (ONE pallas_call, carry in VMEM scratch across grid steps),
+  and the PR 5 host loop (one dispatch per chunk). Cold compile, steady
+  state, and observed dispatch counts (``stream.dispatch_count()``) are
+  recorded; scan <= one-shot is asserted — that inequality is what lets
+  streaming strictly dominate.
 """
 from __future__ import annotations
 
@@ -43,7 +47,9 @@ def _timeit(fn, reps=5):
 
 def _stream_traces() -> int:
     return (stream._update_plain._cache_size()
-            + stream._update_donated._cache_size())
+            + stream._update_donated._cache_size()
+            + stream._scan_plain._cache_size()
+            + stream._scan_donated._cache_size())
 
 
 def _mixed_corpus(n_docs: int, rng):
@@ -64,15 +70,21 @@ def _signing_rows(n_docs: int):
     stream_traces = _stream_traces() - t0
 
     b0 = dd._sig_fn._cache_size()
-    cold_bucket = _timeit(lambda: dd.signature_many_bucketed(docs), reps=1)
+    cold_bucket = _timeit(lambda: dd._signature_many_bucketed(docs), reps=1)
     bucket_traces = dd._sig_fn._cache_size() - b0
 
-    want = dd.signature_many_bucketed(docs)
+    want = dd._signature_many_bucketed(docs)
     np.testing.assert_array_equal(dd.signature_many(docs), want)  # bit-exact
 
     t_stream = _timeit(lambda: dd.signature_many(docs), reps=3)
-    t_bucket = _timeit(lambda: dd.signature_many_bucketed(docs), reps=3)
+    t_bucket = _timeit(lambda: dd._signature_many_bucketed(docs), reps=3)
     dd.close()
+    # the PR 6 demotion contract: the scan-fed chunked path must at least
+    # match the bucketed oracle's steady-state throughput on the bucketed
+    # path's own worst case — otherwise the demotion was premature.
+    assert t_stream <= t_bucket * 1.05, (
+        f"chunked signing lost to bucketed: {t_stream * 1e3:.1f}ms vs "
+        f"{t_bucket * 1e3:.1f}ms")
     return [
         {"name": f"stream_sign_chunked_{n_docs}docs",
          "us_per_call": t_stream * 1e6,
@@ -122,7 +134,9 @@ def _donation_rows(B: int = 32, chunk_s: int = 512, n_chunks: int = 32):
     ]
 
 
-def _oneshot_rows(B: int = 16, S: int = 16384, chunk_s: int = 1024):
+def _executor_rows(B: int = 16, S: int = 16384, chunk_s: int = 1024):
+    """Scan vs grid vs host loop vs one-shot on one (B, S) batch: cold
+    compile, steady state, and observed device-dispatch counts."""
     plan = SketchPlan(HashSpec(family="cyclic", n=8, L=32),
                       (("sig", MinHashSpec(k=64)),))
     key = jax.random.PRNGKey(1)
@@ -131,25 +145,45 @@ def _oneshot_rows(B: int = 16, S: int = 16384, chunk_s: int = 1024):
     operands = {"sig": {"a": jax.random.bits(ka, (64,), dtype=jnp.uint32)
                         | np.uint32(1),
                         "b": jax.random.bits(kb, (64,), dtype=jnp.uint32)}}
-    want = np.asarray(api.run(plan, h1v, operands=operands)["sig"])
-    np.testing.assert_array_equal(
-        np.asarray(stream.run_stream(plan, h1v, chunk_s=chunk_s,
-                                     operands=operands)["sig"]), want)
+    toks = B * S
+
+    t0 = time.perf_counter()
+    want = np.asarray(jax.block_until_ready(
+        api.run(plan, h1v, operands=operands)["sig"]))
+    cold_one = time.perf_counter() - t0
     t_one = _timeit(lambda: jax.block_until_ready(
         api.run(plan, h1v, operands=operands)["sig"]), reps=3)
-    t_str = _timeit(lambda: jax.block_until_ready(
-        stream.run_stream(plan, h1v, chunk_s=chunk_s,
-                          operands=operands)["sig"]), reps=3)
-    toks = B * S
-    return [
-        {"name": f"stream_oneshot_api_run_{B}x{S}",
-         "us_per_call": t_one * 1e6,
-         "derived": f"{toks / t_one / 1e6:.1f} Mtok/s, O(S) live"},
-        {"name": f"stream_run_stream_{B}x{S}_c{chunk_s}",
-         "us_per_call": t_str * 1e6,
-         "derived": f"{toks / t_str / 1e6:.1f} Mtok/s, O(chunk) live; "
-                    f"{t_one / t_str:.2f}x vs one-shot"},
-    ]
+    rows = [{"name": f"stream_oneshot_api_run_{B}x{S}",
+             "us_per_call": t_one * 1e6,
+             "derived": f"{toks / t_one / 1e6:.1f} Mtok/s, O(S) live; "
+                        f"1 dispatch, cold {cold_one * 1e3:.0f}ms"}]
+
+    times = {}
+    for ex in ("scan", "grid", "host"):
+        go = lambda ex=ex: jax.block_until_ready(stream.run_stream(
+            plan, h1v, chunk_s=chunk_s, operands=operands,
+            executor=ex)["sig"])
+        t0 = time.perf_counter()
+        got = go()
+        cold = time.perf_counter() - t0
+        np.testing.assert_array_equal(np.asarray(got), want)   # bit-exact
+        d0 = stream.dispatch_count()
+        go()
+        disp = stream.dispatch_count() - d0
+        t = times[ex] = _timeit(go, reps=3)
+        rows.append(
+            {"name": f"stream_exec_{ex}_{B}x{S}_c{chunk_s}",
+             "us_per_call": t * 1e6,
+             "derived": f"{toks / t / 1e6:.1f} Mtok/s, O(chunk) live; "
+                        f"{disp} dispatch(es), cold {cold * 1e3:.0f}ms; "
+                        f"{t_one / t:.2f}x vs one-shot"})
+    # the PR 6 tentpole claim: folding the chunk loop on-device makes
+    # streaming strictly dominate — the scan executor must not be slower
+    # than signing the whole batch in one shot.
+    assert times["scan"] <= t_one * 1.05, (
+        f"scan executor lost to one-shot: {times['scan'] * 1e3:.1f}ms vs "
+        f"{t_one * 1e3:.1f}ms")
+    return rows
 
 
 def run(n_docs: int = 256, scale: float = 1.0):
@@ -157,7 +191,7 @@ def run(n_docs: int = 256, scale: float = 1.0):
     workloads for smoke runs; floors keep every measurement meaningful."""
     scale = min(1.0, max(scale, 0.0))
     n_docs = max(32, int(n_docs * scale))
-    return _signing_rows(n_docs) + _donation_rows() + _oneshot_rows()
+    return _signing_rows(n_docs) + _donation_rows() + _executor_rows()
 
 
 if __name__ == "__main__":

@@ -8,18 +8,23 @@ paper proves CYCLIC (after the (n-1)-bit discard) to have.
 
 The data-plane is *streamed, batched and fused*: a one-MinHash
 :class:`SketchPlan` is built once at construction and documents are signed
-by the chunked streaming executor (:mod:`repro.kernels.stream`) — groups of
-``stream_rows`` documents advance through fixed ``(stream_rows,
-stream_chunk_s)`` tiles with the signature state carried (and donated)
-across chunks, so the WHOLE corpus signs through ONE compiled executor
-shape (the old shape-bucket group-by paid one jit compile and one dispatch
-per power-of-two length bucket, and could not sign a document longer than
-one device buffer). The rolling hash (CYCLIC or GENERAL), the Theorem-1
-discard, and the k-lane affine remix + min still all happen in a single
-fused device pass per chunk; masked windows are excluded from the min
-outright, so signatures are independent of chunking and bit-identical to
-the one-shot bucketed path (kept as :meth:`signature_many_bucketed` — the
-fallback for non-fused families and the benchmark baseline).
+by the on-device streaming scan executor (:mod:`repro.kernels.stream`) —
+groups of ``stream_rows`` documents advance through fixed
+``(stream_block_chunks, stream_rows, stream_chunk_s)`` chunk blocks, each
+block folded by ONE device dispatch (``stream.update_many``: the chunk
+loop is a ``lax.scan`` inside the compiled graph, the signature state is
+the scan carry, donated in place), with the next block's host->device
+transfer double-buffered behind the in-flight scan (``stream.feed``). The
+whole corpus signs through ONE compiled executor shape — any document
+length, including documents longer than one device buffer — where the old
+shape-bucket group-by paid one jit compile and one dispatch per
+power-of-two length bucket. The rolling hash (CYCLIC or GENERAL), the
+Theorem-1 discard, and the k-lane affine remix + min still all happen in a
+single fused device pass per chunk; masked windows are excluded from the
+min outright, so signatures are independent of chunking and bit-identical
+to the one-shot bucketed path (demoted to :meth:`_signature_many_bucketed`
+— a test-only parity oracle that doubles as the fallback for families
+outside the fused engine).
 
 Scaling out (two independent axes):
 * **signing** — a ``mesh``/``data_shards`` knob routes the bucket batches
@@ -100,6 +105,10 @@ class DedupConfig:
     # whole corpus, any document length
     stream_rows: int = 64
     stream_chunk_s: int = 512
+    # chunks folded per device dispatch: the scan executor runs blocks of
+    # this many chunks inside one compiled lax.scan, so the host pays
+    # 1/stream_block_chunks of the old per-chunk dispatch overhead
+    stream_block_chunks: int = 8
     # donate the carried signature state between chunks ("auto": on for
     # backends with donation support)
     stream_donate: object = "auto"
@@ -126,6 +135,10 @@ class BandShardedLSHIndex:
     itself stays sequential in document order, so streaming first-wins
     semantics are reproduced exactly.
     """
+
+    # below this many batch rows a pooled probe loses to its own task
+    # handoffs (each shard's np.unique group-by is microseconds)
+    _POOL_MIN_ROWS = 64
 
     def __init__(self, n_bands: int, workers: int = 0):
         self.n_bands = n_bands
@@ -194,7 +207,10 @@ class BandShardedLSHIndex:
         """
         D = kb.shape[0]
         cols = [np.ascontiguousarray(kb[:, b]) for b in range(self.n_bands)]
-        if self.workers > 1:
+        # pool fan-out only pays when each shard's group-by is bigger than
+        # a task handoff; small probes (streaming check_and_add, smoke
+        # batches) run inline even when workers were requested
+        if self.workers > 1 and D >= self._POOL_MIN_ROWS:
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(self.workers)
             per_band = list(self._pool.map(self._probe_shard,
@@ -297,61 +313,92 @@ class MinHashDeduper:
         return jnp.min(mixed, axis=-1)
 
     def signature_many(self, docs: Sequence[np.ndarray]) -> np.ndarray:
-        """Sign a whole document list: (D, k) uint32 through the chunked
-        streaming executor — ONE compiled shape for the entire corpus.
+        """Sign a whole document list: (D, k) uint32 through the on-device
+        streaming scan executor — ONE compiled shape for the entire corpus,
+        one device dispatch per ``stream_block_chunks`` chunks.
 
         Documents are grouped ``stream_rows`` at a time *by descending
         length* (signatures are per-row and order-independent, so packing
         similar lengths together just minimizes masked-row waste); each
-        group advances through fixed ``(stream_rows, stream_chunk_s)`` token
-        tiles with the signature state carried (and donated) across chunks,
-        so mixed-length corpora — including documents longer than any single
-        device buffer — never trigger a retrace. Rows that run out of
-        symbols simply submit 0-length chunks; a document shorter than the
-        n-gram window signs to the sentinel signature, exactly as the
-        one-shot path masks it. Non-fused families fall back to
-        :meth:`signature_many_bucketed`.
+        group advances through ``(T, stream_rows, stream_chunk_s)`` token
+        blocks fed to ``stream.feed`` — full ``stream_block_chunks``-chunk
+        blocks plus one pow2-sized tail block, so the executor compiles at
+        most ``log2(stream_block_chunks)+1`` block shapes EVER, whatever
+        the corpus length mix. Inside a block the chunk loop runs as a
+        ``lax.scan`` in the compiled graph with the signature state as the
+        (donated) loop carry, and the next block's host->device transfer
+        overlaps the in-flight scan. A row that runs out of symbols submits
+        0-length chunks, and a document shorter than the n-gram window
+        signs to the sentinel signature, exactly as the one-shot path masks
+        it. Non-fused families fall back to the bucketed oracle.
         """
         if self.plan is None:
-            return self.signature_many_bucketed(docs)
+            return self._signature_many_bucketed(docs)
         cfg = self.cfg
         D = len(docs)
         out = np.empty((D, cfg.n_signatures), np.uint32)
         Bt, Cs = cfg.stream_rows, cfg.stream_chunk_s
+        # stream_rows is a PER-SHARD tile budget: under a data mesh a group
+        # spans up to stream_rows * shards rows (power-of-two, capped by
+        # corpus size so a small corpus never pays masked-row waste), so
+        # sharding cuts the dispatch count instead of slicing each group
+        # into 8-row shards that lose to dispatch overhead. The row-shape
+        # set stays finite ({1,2,..,shards} * stream_rows), so the compile
+        # bound is still corpus-independent.
+        d = (self.mesh.devices.size if self.mesh is not None
+             else cfg.data_shards or 1)
+        if d > 1 and len(docs) >= 2 * Bt:
+            Bt *= 1 << int(np.log2(min(d, len(docs) // Bt)))
+        T0 = max(1, cfg.stream_block_chunks)
         operands = {"sig": {"a": self.mh_params["a"],
                             "b": self.mh_params["b"]}}
         order = np.argsort([-len(d) for d in docs], kind="stable")
         for g in range(0, D, Bt):
             sel = order[g : g + Bt]
             group = [np.asarray(docs[i]) for i in sel]
-            lens = np.array([len(d) for d in group], np.int64)
+            max_len = max((len(d) for d in group), default=0)
+            n_chunks = max(1, -(-max_len // Cs))
+
+            def blocks():
+                # full T0-chunk blocks, then one pow2-sized tail block: the
+                # executor sees at most log2(T0)+1 distinct block shapes
+                # EVER (corpus-independent), and a short group never pays
+                # for T0 chunks of masked compute when it only has one
+                done = 0
+                while done < n_chunks:
+                    rem = n_chunks - done
+                    T = T0 if rem >= T0 else 1 << int(np.ceil(np.log2(rem)))
+                    toks = np.zeros((T, Bt, Cs), np.uint32)
+                    lengths = np.zeros((T, Bt), np.int32)
+                    for t in range(T):
+                        lo = (done + t) * Cs
+                        for r, d in enumerate(group):
+                            v = int(np.clip(len(d) - lo, 0, Cs))
+                            if v:
+                                toks[t, r, :v] = d[lo : lo + v]
+                                lengths[t, r] = v
+                    done += T
+                    # h1 lookup dispatches async; the block rides to the
+                    # device already hash-mapped
+                    yield self._lookup_fn(jnp.asarray(toks)), lengths
+
             state = stream.init_state(self.plan, Bt, mesh=self.mesh,
                                       data_shards=cfg.data_shards)
-            for c in range(max(1, -(-int(lens.max(initial=0)) // Cs))):
-                lo = c * Cs
-                toks = np.zeros((Bt, Cs), np.uint32)
-                lengths = np.zeros((Bt,), np.int32)
-                for r, d in enumerate(group):
-                    v = int(np.clip(len(d) - lo, 0, Cs))
-                    if v:
-                        toks[r, :v] = d[lo : lo + v]
-                        lengths[r] = v
-                state = stream.update(
-                    self.plan, state, self._lookup_fn(jnp.asarray(toks)),
-                    lengths=lengths, operands=operands, impl=cfg.impl,
-                    donate=cfg.stream_donate, mesh=self.mesh,
-                    data_shards=cfg.data_shards)
+            state = stream.feed(self.plan, blocks(), state,
+                                operands=operands, impl=cfg.impl,
+                                donate=cfg.stream_donate, mesh=self.mesh,
+                                data_shards=cfg.data_shards)
             sigs = np.asarray(stream.finalize(self.plan, state,
                                               batch=Bt)["sig"])
             out[sel] = sigs[: len(group)]
         return out
 
-    def signature_many_bucketed(self, docs: Sequence[np.ndarray]) -> np.ndarray:
-        """The pre-streaming signing path: one device call per
-        (length-bucket, row-bucket) shape — O(log) distinct jit shapes.
-        Kept as the fallback for families outside the fused engine and as
-        the baseline the streaming path is benchmarked (and parity-tested)
-        against."""
+    def _signature_many_bucketed(self, docs: Sequence[np.ndarray]) -> np.ndarray:
+        """The pre-streaming signing path, demoted from production: one
+        device call per (length-bucket, row-bucket) shape — O(log) distinct
+        jit shapes. Kept ONLY as the parity/test oracle the scan executor
+        is validated against and as the fallback for families outside the
+        fused engine (THREEWISE, ID37, ...)."""
         D = len(docs)
         out = np.empty((D, self.cfg.n_signatures), np.uint32)
         groups: Dict[int, List[int]] = {}

@@ -185,6 +185,25 @@ class NgramStats:
         return {"stream": st,
                 "tokens": self._count_tokens(sstate["tokens"], added)}
 
+    def update_stream_many(self, sstate: Dict, tokens, lengths=None) -> Dict:
+        """Fold a (T, B, C) block of T chunks into the stream in ONE device
+        dispatch (the scan executor: the chunk loop runs as ``lax.scan``
+        inside the compiled graph with the sketch state as the loop carry).
+        Bit-identical to T successive :meth:`update_stream` calls, at
+        1/T of the dispatch overhead; a fixed block shape never retraces."""
+        tokens = jnp.asarray(tokens, jnp.uint32)
+        st = stream.update_many(
+            self.plan, sstate["stream"], self._lookup(tokens),
+            lengths=lengths,
+            operands={"cms": {"a": self._cms_params["a"],
+                              "b": self._cms_params["b"]}},
+            impl=self.cfg.impl, mesh=self.mesh,
+            data_shards=self.cfg.data_shards)
+        added = (int(tokens.size)
+                 if lengths is None else int(np.sum(np.asarray(lengths))))
+        return {"stream": st,
+                "tokens": self._count_tokens(sstate["tokens"], added)}
+
     def finalize_stream(self, sstate: Dict) -> Dict:
         """Close the stream into an ordinary stats state (the carried HLL
         registers and CMS table ARE the running state — no re-merge)."""

@@ -104,17 +104,24 @@ def check_row_counts(counts, what: str, upper: Optional[int] = None) -> None:
     if isinstance(counts, jax.core.Tracer):
         return
     vals = np.asarray(counts)
-    neg = vals < 0
+    flat = vals.reshape(-1)
+
+    def where(i):          # multi-dim counts (e.g. (T, B) chunk stacks)
+        if vals.ndim <= 1:
+            return f"row {i}"
+        return f"row {np.unravel_index(i, vals.shape)}"
+
+    neg = flat < 0
     if neg.any():
         i = int(np.argmax(neg))
         raise ValueError(
-            f"{what} must be non-negative; row {i} has {int(vals[i])}")
+            f"{what} must be non-negative; {where(i)} has {int(flat[i])}")
     if upper is not None:
-        over = vals > upper
+        over = flat > upper
         if over.any():
             i = int(np.argmax(over))
             raise ValueError(
-                f"{what} must be <= {upper}; row {i} has {int(vals[i])}")
+                f"{what} must be <= {upper}; {where(i)} has {int(flat[i])}")
 
 
 def norm_windows(n_windows, B: int, W: int) -> jnp.ndarray:

@@ -43,17 +43,48 @@ idle row's tail is preserved verbatim (the tail refresh gathers at the
 row's own fill level), so ragged document batches and multi-tenant streams
 share one executor shape.
 
-Sharding composes: pass ``mesh``/``data_shards`` and every chunk update runs
-the plan under ``shard_map`` on the data mesh (row state sharded with the
-rows, corpus-level state merged exactly once outside the per-shard pass) —
+Sharding composes: pass ``mesh``/``data_shards`` and the executor runs
+under ``shard_map`` on the data mesh — for the scan executor ONE partitioned
+region wraps the whole chunk loop (row state scans shard-locally;
+corpus-level state accumulates per-shard partials merged exactly once after
+the loop, legal because the merge operators are associative/commutative) —
 bit-identical at any device count.
+
+The chunk loop itself lives **on device** (PR 6): the host-driven
+one-jit-call-per-chunk loop paid one dispatch per chunk — exactly the O(1)
+-per-symbol budget the recursive families buy back in recurrence cost —
+so the executors below fold the loop into the compiled graph and a whole
+stream becomes ONE device dispatch:
+
+* **scan executor** — ``lax.scan`` over pre-tiled ``(num_chunks, B, C)``
+  chunk tiles with the carry pytree (tail + seen + every sketch's state) as
+  the loop state. The scanned carry is donated, so in steady state the
+  loop runs entirely in place on device.
+* **in-kernel chunk grid** — on the fused path the chunk loop is pushed
+  into the kernel itself: the plan kernel's sequence-block grid dimension
+  *is* a chunk loop (``block_s``-wide steps over the tail-concatenated
+  stream) with every sketch's accumulator resident in VMEM scratch across
+  grid steps — init-from-carry at step 0, flush at the last (the PR 4/5
+  scratch lifecycle) — so the carry never round-trips HBM between chunks
+  and a multi-chunk stream is exactly one ``pallas_call``.
 
 Entry points:
 
 * :func:`init_state` / :func:`update` / :func:`finalize` — the stateful
-  API for unbounded streams (stats/decontam telemetry).
+  API for unbounded streams (stats/decontam telemetry); one dispatch per
+  chunk.
+* :func:`update_many` — fold a whole ``(T, B, C)`` block of chunks in ONE
+  dispatch (the scan executor under the stateful API). A fixed ``T`` gives
+  a single compiled shape for any stream length — the executor never
+  retraces, however long the feed runs.
+* :func:`feed` — drive :func:`update_many` over an unbounded host iterator
+  with the next block's host->device transfer overlapped with the current
+  block's compute (double buffering).
 * :func:`run_stream` — a drop-in chunked ``api.run``: same arguments plus
-  ``chunk_s``, same outputs, one compiled shape for any S.
+  ``chunk_s``, same outputs. ``executor="scan"`` (default) runs the whole
+  stream in one dispatch; ``"grid"`` runs it in one ``pallas_call`` on the
+  fused path; ``"host"`` keeps the PR 5 one-dispatch-per-chunk loop (the
+  benchmark baseline).
 """
 from __future__ import annotations
 
@@ -64,8 +95,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from repro.kernels import api, shard
-from repro.kernels.plan import SketchPlan
+from repro.kernels.plan import CountMinSpec, HLLSpec, SketchPlan
+
+_EXECUTORS = ("scan", "grid", "host")
+
+# device dispatches issued by this module's executors (one jitted call = one
+# XLA execution); the one-dispatch-per-stream property is asserted against
+# this counter in tests and reported by the benchmarks
+_dispatches = 0
+
+
+def dispatch_count() -> int:
+    """Total chunk-executor device dispatches issued by this module."""
+    return _dispatches
+
+
+def _dispatched(n: int = 1) -> None:
+    global _dispatches
+    _dispatches += n
 
 # backends whose runtime implements buffer donation; elsewhere "auto" skips
 # the request (XLA would silently ignore it — harmless, but explicit beats
@@ -202,6 +253,100 @@ _update_donated = jax.jit(
     _update_body, static_argnums=(0, 1, 2, 3), donate_argnums=(4,))
 
 
+def _scan_body(plan, ref_path, mesh, tile, n_chunks, state, x, xb, lens,
+               operands):
+    """The whole chunk loop inside the compiled graph: ``lax.scan`` over
+    chunk tiles with the carry pytree as the loop state.
+
+    Two input layouts, selected by the static ``n_chunks``:
+
+    * ``n_chunks=None`` — pre-tiled: ``x``/``xb`` are (T, B, C) chunk
+      stacks and ``lens`` is (T, B) per-chunk real-symbol counts (the
+      :func:`update_many` contract).
+    * ``n_chunks=T`` — flat: ``x``/``xb`` are (B, T*C) whole streams and
+      ``lens`` is the (B,) *total* symbol budget; the tiling and the
+      per-chunk length split ``clip(lens - t*C, 0, C)`` happen inside the
+      jit so :func:`run_stream` is one dispatch end to end.
+
+    Every scan step is exactly :func:`_update_body` — same tail seam, same
+    ``w_start`` masking, same per-sketch merge — so the scan executor is
+    bit-identical to the host loop by construction.
+
+    Under a mesh the ``shard_map`` wraps the WHOLE scan (not one region per
+    chunk): row state scans shard-locally, and each shard accumulates its
+    own "global" (HLL/CMS) partial from the sketch's identity, merged
+    across shards and with the incoming carry exactly once after the loop —
+    legal because both merge operators (max, integer add) are associative
+    and commutative, so end-merging the per-shard partials is bit-identical
+    to merging every chunk.
+    """
+    if n_chunks is None:
+        xs_x, xs_b, xs_len = x, xb, lens
+    else:
+        B = x.shape[0]
+        C = x.shape[1] // n_chunks
+        xs_x = x.reshape(B, n_chunks, C).swapaxes(0, 1)
+        xs_b = (xb.reshape(B, n_chunks, C).swapaxes(0, 1)
+                if xb is not None else None)
+        lo = jnp.arange(n_chunks, dtype=jnp.int32)[:, None] * np.int32(C)
+        xs_len = jnp.clip(lens[None, :].astype(jnp.int32) - lo, 0,
+                          np.int32(C))
+
+    def step(st, xs):
+        ck, ckb, ln = xs
+        return _update_body(plan, ref_path, None, tile, st, ck, ckb, ln,
+                            operands), None
+
+    if mesh is None:
+        state, _ = jax.lax.scan(step, state, (xs_x, xs_b, xs_len))
+        return state
+
+    # pop the global carries: each shard scans from the sketch identity
+    # (zeros — max and add both start there) so the replicated carry cannot
+    # be multiplied by the cross-shard merge
+    carry = {}
+    sk = dict(state["sketch"])
+    for name, spec in plan.sketches:
+        if spec.state_kind == "global":
+            carry[name] = (sk[name], shard._GLOBAL_MERGE[type(spec)])
+            sk[name] = jnp.zeros_like(sk[name])
+    state = dict(state, sketch=sk)
+
+    def local(st, xs_x, xs_b, xs_len):
+        st, _ = jax.lax.scan(step, st, (xs_x, xs_b, xs_len))
+        out = dict(st["sketch"])
+        for name, spec in plan.sketches:
+            if isinstance(spec, HLLSpec):
+                out[name] = jax.lax.pmax(out[name], shard.AXIS)
+            elif isinstance(spec, CountMinSpec):
+                out[name] = jax.lax.psum(out[name], shard.AXIS)
+        return dict(st, sketch=out)
+
+    row = P(shard.AXIS)
+    chunk_axis = P(None, shard.AXIS)
+    st_spec = {k: row for k in state if k != "sketch"}
+    st_spec["sketch"] = {name: P() if spec.state_kind == "global" else row
+                         for name, spec in plan.sketches}
+    state = shard_map(
+        local, mesh=mesh,
+        in_specs=(st_spec, chunk_axis,
+                  chunk_axis if xs_b is not None else None, chunk_axis),
+        out_specs=st_spec, check_rep=False)(state, xs_x, xs_b, xs_len)
+    out = dict(state["sketch"])
+    for name, (init, merge) in carry.items():
+        out[name] = merge(out[name], init)
+    return dict(state, sketch=out)
+
+
+# the scan executor's jit twins: the carry (arg 5) is donated so the loop
+# state lives in place on device across the whole stream; statics mirror
+# _update_plain/_update_donated plus the chunk-count layout selector
+_scan_plain = jax.jit(
+    _scan_body, static_argnums=(0, 1, 2, 3, 4))
+_scan_donated = jax.jit(
+    _scan_body, static_argnums=(0, 1, 2, 3, 4), donate_argnums=(5,))
+
+
 def update(plan: SketchPlan, state: Dict, chunk, *, chunk_b=None,
            lengths=None, operands=None, impl: str = "auto", donate="auto",
            mesh=None, data_shards: Optional[int] = None,
@@ -272,8 +417,114 @@ def update(plan: SketchPlan, state: Dict, chunk, *, chunk_b=None,
         lengths = jnp.pad(lengths, (0, Bp - B))
     tile = tuple(sorted(tile_kw.items()))
     fn = _update_donated if _resolve_donate(donate) else _update_plain
+    _dispatched()
     return fn(plan, ref_path, mesh, tile, state, chunk, chunk_b, lengths,
               operands)
+
+
+def update_many(plan: SketchPlan, state: Dict, chunks, *, chunk_b=None,
+                lengths=None, operands=None, impl: str = "auto",
+                donate="auto", mesh=None, data_shards: Optional[int] = None,
+                **tile_kw) -> Dict:
+    """Fold a ``(T, B, C)`` block of T chunks into the carry in ONE device
+    dispatch: the chunk loop runs as ``lax.scan`` inside the compiled graph
+    with the carry pytree as the loop state.
+
+    Semantically exactly T successive :func:`update` calls (bit-identical
+    carry out), but the host pays one dispatch per *block* instead of one
+    per chunk — and a fixed ``(T, B, C)`` is a single compiled shape, so an
+    unbounded feed never retraces however long it runs.
+
+    Args mirror :func:`update` with a leading chunk axis:
+      chunks: (T, B, C) uint32 h1 chunk stack, scanned in order.
+      chunk_b: (T, B, C) second family draw, iff the plan has a BloomSpec.
+      lengths: (T, B) real-symbol counts per chunk (default: all C). A
+        finished row submits 0 from some chunk on and its carry rides
+        through untouched, so ragged streams pad with zero-length chunks.
+    """
+    mesh = _resolve_mesh(mesh, data_shards)
+    ref_path = api.use_ref(impl)
+    chunks = jnp.asarray(chunks)
+    if chunks.ndim != 3:
+        raise ValueError(f"chunks must be (T, B, C), got shape "
+                         f"{chunks.shape}")
+    T, B, C = chunks.shape
+    if T < 1:
+        raise ValueError(f"need at least one chunk, got T={T}")
+    Bp = state_batch(plan, state)
+    if B > Bp:
+        raise ValueError(f"chunk rows {B} > stream state rows {Bp}")
+    for name in (operands or {}):
+        if "init" in (operands[name] or {}):
+            raise ValueError(
+                f"sketch {name!r}: do not pass 'init' to stream.update_many "
+                f"— the stream carry supplies every sketch's state")
+    operands = api._check_operands(plan, operands, None)
+    if plan.needs_second_stream:
+        if chunk_b is None:
+            raise ValueError("plan contains a BloomSpec: the double-hashing "
+                             "probe stride needs a second stream chunk_b")
+        chunk_b = jnp.asarray(chunk_b)
+        if chunk_b.shape != chunks.shape:
+            raise ValueError(f"chunk_b shape {chunk_b.shape} != chunks "
+                             f"shape {chunks.shape}")
+    elif chunk_b is not None:
+        raise ValueError("chunk_b given but no sketch in the plan consumes "
+                         "a second hash stream")
+    if lengths is None:
+        lengths = jnp.full((T, B), C, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        if lengths.shape != (T, B):
+            raise ValueError(f"lengths shape {lengths.shape} != chunk stack "
+                             f"({T}, {B})")
+        api.check_row_counts(lengths, "lengths", upper=C)
+    if B < Bp:            # shard padding rows: no symbols, carry untouched
+        chunks = jnp.pad(chunks, ((0, 0), (0, Bp - B), (0, 0)))
+        if chunk_b is not None:
+            chunk_b = jnp.pad(chunk_b, ((0, 0), (0, Bp - B), (0, 0)))
+        lengths = jnp.pad(lengths, ((0, 0), (0, Bp - B)))
+    tile = tuple(sorted(tile_kw.items()))
+    fn = _scan_donated if _resolve_donate(donate) else _scan_plain
+    _dispatched()
+    return fn(plan, ref_path, mesh, tile, None, state, chunks, chunk_b,
+              lengths, operands)
+
+
+def feed(plan: SketchPlan, blocks, state: Dict, *, operands=None,
+         impl: str = "auto", donate="auto", mesh=None,
+         data_shards: Optional[int] = None, **tile_kw) -> Dict:
+    """Drive :func:`update_many` over a host iterator of chunk blocks with
+    the host->device transfer double-buffered: each scan dispatch is
+    asynchronous, so block t+1 is pulled from the iterator and its
+    ``device_put`` enqueued while block t is still computing on device —
+    the feed never serializes transfer behind compute.
+
+    ``blocks`` yields either a ``(T, B, C)`` chunk stack, or a tuple
+    ``(chunks, lengths)`` / ``(chunks, lengths, chunk_b)`` with ``lengths``
+    (T, B). Keep one (T, B, C) shape for the whole feed (pad the final
+    short block with zero-length chunks) and the executor compiles once.
+    """
+    def _put(blk):
+        if blk is None:
+            return None
+        if not isinstance(blk, (tuple, list)):
+            blk = (blk,)
+        blk = tuple(blk) + (None,) * (3 - len(blk))
+        chunks, lens, chunk_b = blk[:3]
+        dev = lambda a: None if a is None else jax.device_put(jnp.asarray(a))
+        return dev(chunks), dev(lens), dev(chunk_b)
+
+    it = iter(blocks)
+    cur = _put(next(it, None))
+    while cur is not None:
+        chunks, lens, chunk_b = cur
+        state = update_many(plan, state, chunks, chunk_b=chunk_b,
+                            lengths=lens, operands=operands, impl=impl,
+                            donate=donate, mesh=mesh,
+                            data_shards=data_shards, **tile_kw)
+        cur = _put(next(it, None))   # H2D overlaps the in-flight scan
+    return state
 
 
 def finalize(plan: SketchPlan, state: Dict,
@@ -294,21 +545,42 @@ def finalize(plan: SketchPlan, state: Dict,
 def run_stream(plan: SketchPlan, h1v, *, chunk_s: int, h1v_b=None,
                n_windows=None, operands=None, impl: str = "auto",
                donate="auto", mesh=None, data_shards: Optional[int] = None,
+               executor: str = "scan", n_chunks: Optional[int] = None,
                **tile_kw) -> Dict[str, jnp.ndarray]:
     """Chunked drop-in for :func:`repro.kernels.api.run`: identical
-    arguments (plus ``chunk_s``) and bit-identical outputs, but the device
-    only ever sees fixed ``(B, chunk_s + n - 1)`` tiles — ONE compiled
-    executor for any sequence length, and O(B * chunk_s) live memory
-    regardless of S.
+    arguments (plus ``chunk_s``) and bit-identical outputs, but the stream
+    is consumed in fixed ``chunk_s``-symbol steps with the cross-chunk
+    carry — O(B * chunk_s) live window state regardless of S.
 
-    A host-side loop feeds ``ceil(S / chunk_s)`` chunks through
-    :func:`update` with the carry donated between chunks. Not meaningfully
-    jit-able from outside (it is already a loop of jitted calls).
+    ``executor`` picks how the chunk loop runs:
+
+    * ``"scan"`` (default) — the loop lives inside the compiled graph
+      (``lax.scan`` over chunk tiles, carry as loop state): the whole
+      stream is ONE device dispatch. Each distinct chunk *count* is one
+      compiled shape; pass ``n_chunks`` >= ``ceil(S/chunk_s)`` to pin the
+      count (shorter streams pad with zero-length chunks) and share one
+      trace across stream lengths.
+    * ``"grid"`` — the loop lives inside the kernel itself: the whole
+      stream goes through one :func:`update` call, and on the fused path
+      (``impl="pallas"``) the plan kernel's sequence-block grid dimension
+      *is* the chunk loop — ``block_s``-wide steps with every sketch's
+      accumulator resident in VMEM scratch across grid steps (init at step
+      0, flush at the last), so a multi-chunk stream is exactly one
+      ``pallas_call``. ``chunk_s`` becomes the ``block_s`` hint.
+    * ``"host"`` — the PR 5 baseline: a host loop of one-chunk
+      :func:`update` dispatches, one jit call per chunk.
+
+    All three are bit-identical to one-shot ``api.run``.
     """
+    if executor not in _EXECUTORS:
+        raise ValueError(f"unknown executor={executor!r}; expected one of "
+                         f"{_EXECUTORS}")
     if chunk_s < 1:
         raise ValueError(f"chunk_s must be >= 1, got {chunk_s}")
     if not isinstance(plan, SketchPlan):
         raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
+    mesh = _resolve_mesh(mesh, data_shards)
+    ref_path = api.use_ref(impl)
     n = plan.hash.n
     x, lead = api.flatten(jnp.asarray(h1v))
     B, S = x.shape
@@ -317,24 +589,69 @@ def run_stream(plan: SketchPlan, h1v, *, chunk_s: int, h1v_b=None,
         xb, _ = api.flatten(jnp.asarray(h1v_b))
         if xb.shape != x.shape:
             raise ValueError(f"h1v_b shape {xb.shape} != h1v shape {x.shape}")
+    if plan.needs_second_stream and xb is None:
+        raise ValueError("plan contains a BloomSpec: the double-hashing "
+                         "probe stride needs a second stream h1v_b")
+    if xb is not None and not plan.needs_second_stream:
+        raise ValueError("h1v_b given but no sketch in the plan consumes a "
+                         "second hash stream")
+    for name in (operands or {}):
+        if "init" in (operands[name] or {}):
+            raise ValueError(
+                f"sketch {name!r}: do not pass 'init' to run_stream — the "
+                f"stream carry supplies every sketch's state")
     # api.run's n_windows contract (count of valid windows) -> per-row
     # symbol budget: nw valid windows consume nw + n - 1 leading symbols
     nw = api.norm_windows(n_windows, B, max(0, S - n + 1))
     sym = jnp.where(nw > 0, nw + np.int32(n - 1), 0)
     state = init_state(plan, B, mesh=mesh, data_shards=data_shards)
-    n_chunks = max(1, -(-S // chunk_s))
-    for c in range(n_chunks):
-        lo = c * chunk_s
-        ck = x[:, lo : lo + chunk_s]
-        ckb = xb[:, lo : lo + chunk_s] if xb is not None else None
-        if ck.shape[1] < chunk_s:       # ragged tail: same compiled shape
-            pad = chunk_s - ck.shape[1]
-            ck = jnp.pad(ck, ((0, 0), (0, pad)))
-            if ckb is not None:
-                ckb = jnp.pad(ckb, ((0, 0), (0, pad)))
-        lengths = jnp.clip(sym - np.int32(lo), 0, np.int32(chunk_s))
-        state = update(plan, state, ck, chunk_b=ckb, lengths=lengths,
+    nc = max(1, -(-S // chunk_s))
+    if n_chunks is not None:
+        if n_chunks < nc:
+            raise ValueError(f"n_chunks={n_chunks} < ceil(S/chunk_s)={nc}")
+        nc = n_chunks
+
+    if executor == "host":
+        for c in range(nc):
+            lo = c * chunk_s
+            ck = x[:, lo : lo + chunk_s]
+            ckb = xb[:, lo : lo + chunk_s] if xb is not None else None
+            if ck.shape[1] < chunk_s:   # ragged tail: same compiled shape
+                pad = chunk_s - ck.shape[1]
+                ck = jnp.pad(ck, ((0, 0), (0, pad)))
+                if ckb is not None:
+                    ckb = jnp.pad(ckb, ((0, 0), (0, pad)))
+            lengths = jnp.clip(sym - np.int32(lo), 0, np.int32(chunk_s))
+            state = update(plan, state, ck, chunk_b=ckb, lengths=lengths,
+                           operands=operands, impl=impl, donate=donate,
+                           mesh=mesh, data_shards=data_shards, **tile_kw)
+    elif executor == "grid":
+        # one update over the whole stream: the fused kernel's sequence
+        # grid is the chunk loop, scratch carried across steps
+        tile_kw = dict(tile_kw)
+        if "block_s" not in tile_kw and chunk_s >= max(n - 1, 8):
+            tile_kw["block_s"] = chunk_s
+        state = update(plan, state, x, chunk_b=xb, lengths=sym,
                        operands=operands, impl=impl, donate=donate,
                        mesh=mesh, data_shards=data_shards, **tile_kw)
+    else:                               # "scan": one dispatch, loop inside
+        pad = nc * chunk_s - S
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)))
+            if xb is not None:
+                xb = jnp.pad(xb, ((0, 0), (0, pad)))
+        operands_n = api._check_operands(plan, operands, None)
+        Bp = state_batch(plan, state)
+        lens = sym
+        if B < Bp:        # shard padding rows: no symbols, carry untouched
+            x = jnp.pad(x, ((0, Bp - B), (0, 0)))
+            if xb is not None:
+                xb = jnp.pad(xb, ((0, Bp - B), (0, 0)))
+            lens = jnp.pad(lens, (0, Bp - B))
+        tile = tuple(sorted(tile_kw.items()))
+        fn = _scan_donated if _resolve_donate(donate) else _scan_plain
+        _dispatched()
+        state = fn(plan, ref_path, mesh, tile, nc, state, x, xb, lens,
+                   operands_n)
     out = finalize(plan, state, batch=B)
     return api.shape_outputs(plan, out, lead)

@@ -15,6 +15,17 @@
 #   1/2/4/8 virtual devices (tests/test_shard.py), the sharded-streaming
 #   parity subset (tests/test_stream_sharded.py), plus the sharded-train
 #   mesh tests, under the 8-virtual-device XLA flag.
+#
+# --bench — the device-bench profile (per the olmax/HomebrewNLP exemplar
+#   harnesses): tcmalloc LD_PRELOAD when present (glibc malloc fragments
+#   under jax's large short-lived host buffers), allocator/report and
+#   logging knobs, 32-bit default dtypes pinned so a stray x64 env leak
+#   cannot silently double every buffer, then benchmarks/run.py. The same
+#   profile runs unchanged on a real TPU/GPU host — the virtual-device
+#   flag only shapes the *host platform* (it is how the CPU container gets
+#   its 1/2/4/8 sweep; accelerator backends ignore it). Extra args pass
+#   through to run.py's environment, e.g.:
+#     REPRO_BENCH_CHARS=430000 ./test.sh --bench
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -22,11 +33,24 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 if [[ "${1:-}" == "--quick" ]]; then
   shift
   exec python -m pytest -x -q tests/test_kernels.py tests/test_sketch_fused.py \
-    tests/test_plan_api.py tests/test_countmin.py tests/test_stream.py "$@"
+    tests/test_plan_api.py tests/test_countmin.py tests/test_stream.py \
+    tests/test_stream_scan.py "$@"
 fi
 if [[ "${1:-}" == "--dist" ]]; then
   shift
   exec python -m pytest -x -q tests/test_shard.py tests/test_countmin.py \
     tests/test_stream_sharded.py tests/test_distributed.py "$@"
+fi
+if [[ "${1:-}" == "--bench" ]]; then
+  shift
+  for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+    if [[ -e "$so" ]]; then export LD_PRELOAD="$so"; break; fi
+  done
+  export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+  export TF_CPP_MIN_LOG_LEVEL=4
+  export JAX_ENABLE_X64=0
+  export JAX_DEFAULT_DTYPE_BITS=32
+  exec python -m benchmarks.run "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.data.corpus import CorpusSpec, bench_corpus, documents, zipf_tokens
-from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.data.dedup import BandShardedLSHIndex, DedupConfig, MinHashDeduper
 from repro.data.decontam import DecontamConfig, Decontaminator
 from repro.data.pipeline import DataPlane, PipelineConfig
 from repro.data.stats import NgramStats, StatsConfig
@@ -149,8 +149,11 @@ def test_stats_update_is_one_rolling_hash_pass(family):
 
 def test_deduper_context_manager_closes_probe_pool():
     rng = np.random.default_rng(3)
+    # batch must clear _POOL_MIN_ROWS: small probes run inline on purpose,
+    # and the lazy pool under test is only ever created past the threshold
+    n_docs = BandShardedLSHIndex._POOL_MIN_ROWS + 8
     docs = [rng.integers(0, 4096, size=int(s)).astype(np.int32)
-            for s in rng.integers(40, 120, size=16)]
+            for s in rng.integers(40, 120, size=n_docs)]
     with MinHashDeduper(DedupConfig(vocab=4096, lsh_workers=4)) as dd:
         dd.add_batch(docs)
         pool = dd._index._pool

@@ -208,28 +208,48 @@ def test_update_validation():
 
 
 def _stream_traces():
+    # every executor twin the streaming module dispatches through: the
+    # per-chunk update pair (host loop) and the scan pair (on-device loop)
     return (stream._update_plain._cache_size()
-            + stream._update_donated._cache_size())
+            + stream._update_donated._cache_size()
+            + stream._scan_plain._cache_size()
+            + stream._scan_donated._cache_size())
 
 
-def test_mixed_length_corpus_signs_with_one_trace():
-    # the tentpole's headline: log-uniform lengths populate many power-of-
-    # two buckets (the old path compiled one executor per bucket); the
-    # streaming path traces its chunk update exactly ONCE
+def test_mixed_length_corpus_signs_with_bounded_traces():
+    # the headline compile-count property: log-uniform lengths populate
+    # many power-of-two buckets (the old path compiled one executor per
+    # bucket, unbounded as lengths grow); the scan executor sees at most
+    # log2(stream_block_chunks)+1 distinct block shapes EVER — full blocks
+    # plus pow2 tail blocks — independent of the corpus length mix
     from repro.data.dedup import DedupConfig, MinHashDeduper
     rng = np.random.default_rng(0)
     docs = [rng.integers(0, 4096, size=int(n)).astype(np.int32)
             for n in np.exp(rng.uniform(np.log(4), np.log(3000), size=30))]
-    with MinHashDeduper(DedupConfig(vocab=4096, stream_rows=8,
-                                    stream_chunk_s=128)) as dd:
+    cfg = DedupConfig(vocab=4096, stream_rows=8, stream_chunk_s=128)
+    bound = int(np.log2(cfg.stream_block_chunks)) + 1
+    with MinHashDeduper(cfg) as dd:
         before = _stream_traces()
+        d0 = stream.dispatch_count()
         sigs = dd.signature_many(docs)
-        assert _stream_traces() - before == 1
-        # and the bucketed baseline really did need one trace per bucket
+        assert _stream_traces() - before <= bound
+        # ... and at a fraction of the host loop's dispatch count: one per
+        # block of chunks, not one per chunk
+        n_groups = -(-len(docs) // 8)
+        assert stream.dispatch_count() - d0 <= n_groups * 4
+        # a second corpus with a very different length mix stays inside the
+        # same constant trace budget (block shapes, not length buckets)
+        docs2 = [rng.integers(0, 4096, size=int(n)).astype(np.int32)
+                 for n in rng.integers(1, 2500, size=40)]
+        sigs2 = dd.signature_many(docs2)
+        assert _stream_traces() - before <= bound
+        # and the bucketed oracle really did need one trace per bucket
         b0 = dd._sig_fn._cache_size()
-        want = dd.signature_many_bucketed(docs)
+        want = dd._signature_many_bucketed(docs)
         assert dd._sig_fn._cache_size() - b0 > 1
         np.testing.assert_array_equal(sigs, want)        # bit-exact too
+        np.testing.assert_array_equal(sigs2,
+                                      dd._signature_many_bucketed(docs2))
 
 
 def test_donated_carry_loop_does_not_retrace():
@@ -267,7 +287,7 @@ def test_dedup_streaming_signatures_and_flags():
     with MinHashDeduper(DedupConfig(vocab=4096, stream_rows=8,
                                     stream_chunk_s=64)) as dd:
         sigs = dd.signature_many(docs)
-        np.testing.assert_array_equal(sigs, dd.signature_many_bucketed(docs))
+        np.testing.assert_array_equal(sigs, dd._signature_many_bucketed(docs))
         for i in (0, 5, 23):
             if len(docs[i]) >= 8:
                 np.testing.assert_array_equal(sigs[i],
@@ -302,7 +322,7 @@ def test_dedup_general_family_streams_too():
                                     stream_rows=4,
                                     stream_chunk_s=96)) as dd:
         np.testing.assert_array_equal(dd.signature_many(docs),
-                                      dd.signature_many_bucketed(docs))
+                                      dd._signature_many_bucketed(docs))
 
 
 def test_stats_streaming_equals_whole_batch():

@@ -1,0 +1,392 @@
+"""The on-device chunk loop (PR 6 scan executor) — acceptance.
+
+* bit-parity: ``run_stream(executor="scan"|"grid")`` == one-shot
+  ``api.run`` == the PR 5 host loop, across all four sketches x {cyclic,
+  general} x chunk sizes down to ``n`` x ragged tails x 1/2/4/8 virtual
+  devices;
+* dispatch accounting: a multi-chunk stream through the scan executor is
+  exactly ONE device dispatch (and exactly one ``pallas_call`` in the
+  lowered graph on the in-kernel-grid path);
+* donation: the scanned carry is donated on ``donate=True`` (and "auto"
+  resolves by backend), asserted on the lowered HLO;
+* compile-count: the scan executor never retraces across stream lengths —
+  fixed blocks (``update_many``) and a pinned ``n_chunks`` both give one
+  trace for any S;
+* ``update_many``/``feed`` equal a sequence of single-chunk updates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _jaxpr_utils import count_primitive
+from repro.core import CountMinSketch, MinHash
+from repro.kernels import api, stream
+from repro.kernels.plan import (BloomSpec, CountMinSpec, HashSpec, HLLSpec,
+                                MinHashSpec, SketchPlan)
+
+
+def _h1v(shape, seed=0):
+    return jax.random.bits(jax.random.PRNGKey(seed), shape, dtype=jnp.uint32)
+
+
+def _plan(family, n=8):
+    return SketchPlan(
+        HashSpec(family=family, n=n, L=32),
+        (("sig", MinHashSpec(k=16)), ("card", HLLSpec(b=4)),
+         ("dec", BloomSpec(k=3, log2_m=14)),
+         ("freq", CountMinSpec(depth=3, log2_width=8))))
+
+
+def _operands(seed=0):
+    p = MinHash(k=16).init(jax.random.PRNGKey(seed + 1))
+    cp = CountMinSketch(depth=3, log2_width=8).init(
+        jax.random.PRNGKey(seed + 2))
+    return {"sig": {"a": p["a"], "b": p["b"]},
+            "dec": {"bits": _h1v((1 << 9,), seed=seed + 3)},
+            "freq": {"a": cp["a"], "b": cp["b"]}}
+
+
+def _assert_same(got, want):
+    for name in want:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]),
+                                      err_msg=name)
+
+
+def _shards(d):
+    if jax.device_count() < d:
+        pytest.skip(f"needs {d} devices, have {jax.device_count()}")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: scan/grid == one-shot == host loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", ["scan", "grid"])
+@pytest.mark.parametrize("family", ["cyclic", "general"])
+@pytest.mark.parametrize("n", [2, 8])
+@pytest.mark.parametrize("chunk_kind", ["n", "n+1", "64", "1024"])
+def test_on_device_loop_bit_identical(executor, family, n, chunk_kind):
+    B, S = 4, 300
+    plan = _plan(family, n)
+    x, xb = _h1v((B, S), seed=n), _h1v((B, S), seed=50 + n)
+    ops = _operands()
+    # ragged: per-row window counts from 0 (fully masked) to full
+    nw = jnp.asarray([0, 1, S // 2, S - n + 1], jnp.int32)
+    chunk_s = {"n": n, "n+1": n + 1, "64": 64, "1024": 1024}[chunk_kind]
+    want = api.run(plan, x, h1v_b=xb, n_windows=nw, operands=ops)
+    got = stream.run_stream(plan, x, chunk_s=chunk_s, h1v_b=xb,
+                            n_windows=nw, operands=ops, executor=executor,
+                            donate=True)
+    _assert_same(got, want)
+    host = stream.run_stream(plan, x, chunk_s=chunk_s, h1v_b=xb,
+                             n_windows=nw, operands=ops, executor="host")
+    _assert_same(got, host)
+
+
+@pytest.mark.parametrize("executor", ["scan", "grid"])
+@pytest.mark.parametrize("impl,tile",
+                         [("ref", {}),
+                          ("pallas", dict(block_b=2, block_s=256))])
+def test_on_device_loop_both_impls(executor, impl, tile):
+    B, S = 3, 290
+    plan = _plan("cyclic")
+    x, xb = _h1v((B, S)), _h1v((B, S), seed=7)
+    ops = _operands()
+    want = api.run(plan, x, h1v_b=xb, operands=ops, impl=impl, **tile)
+    got = stream.run_stream(plan, x, chunk_s=63, h1v_b=xb, operands=ops,
+                            impl=impl, executor=executor, **tile)
+    _assert_same(got, want)
+
+
+@pytest.mark.parametrize("d", [1, 2, 4, 8])
+def test_scan_executor_sharded_bit_identical(d):
+    d = _shards(d)
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("sig", MinHashSpec(k=16)), ("card", HLLSpec(b=4))))
+    p = MinHash(k=16).init(jax.random.PRNGKey(1))
+    ops = {"sig": {"a": p["a"], "b": p["b"]}}
+    B, S = 6, 300                    # deliberately not a multiple of 4/8
+    x = _h1v((B, S))
+    nw = jnp.asarray([0, 5, 100, S - 7, 1, 42], jnp.int32)
+    want = api.run(plan, x, n_windows=nw, operands=ops)
+    got = stream.run_stream(plan, x, chunk_s=64, n_windows=nw, operands=ops,
+                            executor="scan", data_shards=d)
+    _assert_same(got, want)
+
+
+def test_scan_pinned_n_chunks_pads_and_matches():
+    plan = _plan("cyclic")
+    x, xb = _h1v((3, 200)), _h1v((3, 200), seed=9)
+    ops = _operands()
+    want = api.run(plan, x, h1v_b=xb, operands=ops)
+    got = stream.run_stream(plan, x, chunk_s=64, h1v_b=xb, operands=ops,
+                            executor="scan", n_chunks=8)
+    _assert_same(got, want)
+    with pytest.raises(ValueError, match="n_chunks=1 <"):
+        stream.run_stream(plan, x, chunk_s=64, h1v_b=xb, operands=ops,
+                          executor="scan", n_chunks=1)
+    with pytest.raises(ValueError, match="unknown executor"):
+        stream.run_stream(plan, x, chunk_s=64, h1v_b=xb, operands=ops,
+                          executor="warp")
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting: one dispatch / one pallas_call per stream
+# ---------------------------------------------------------------------------
+
+
+def test_multi_chunk_stream_is_one_dispatch():
+    plan = _plan("cyclic")
+    x, xb = _h1v((4, 2048)), _h1v((4, 2048), seed=1)
+    ops = _operands()
+    stream.run_stream(plan, x, chunk_s=256, h1v_b=xb, operands=ops,
+                      executor="scan")               # warm the trace
+    d0 = stream.dispatch_count()
+    stream.run_stream(plan, x, chunk_s=256, h1v_b=xb, operands=ops,
+                      executor="scan")
+    assert stream.dispatch_count() - d0 == 1         # 8 chunks, 1 dispatch
+    d0 = stream.dispatch_count()
+    stream.run_stream(plan, x, chunk_s=256, h1v_b=xb, operands=ops,
+                      executor="host")
+    assert stream.dispatch_count() - d0 == 8         # the PR 5 baseline
+
+
+def test_scan_lowers_to_single_scan_primitive():
+    # the chunk loop really is inside the compiled graph: one lax.scan,
+    # and the kernel appears once (as the scan body), not once per chunk
+    plan = _plan("cyclic")
+    x, xb = _h1v((3, 512)), _h1v((3, 512), seed=2)
+    ops = _operands()
+
+    def scan_fn(xx, xxb):
+        return stream.run_stream(plan, xx, chunk_s=64, h1v_b=xxb,
+                                 operands=ops, executor="scan",
+                                 impl="pallas", donate=False)
+
+    jaxpr = jax.make_jaxpr(scan_fn)(x, xb)
+    assert count_primitive(jaxpr.jaxpr, "scan") == 1
+    assert count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+
+
+def test_grid_path_is_one_pallas_call():
+    # in-kernel chunk loop: the whole multi-chunk stream lowers to exactly
+    # one pallas_call (the kernel's sequence grid is the loop; sketch
+    # accumulators live in VMEM scratch across grid steps)
+    plan = _plan("cyclic")
+    x, xb = _h1v((3, 2048)), _h1v((3, 2048), seed=3)
+    ops = _operands()
+
+    def grid_fn(xx, xxb):
+        return stream.run_stream(plan, xx, chunk_s=256, h1v_b=xxb,
+                                 operands=ops, executor="grid",
+                                 impl="pallas", donate=False)
+
+    jaxpr = jax.make_jaxpr(grid_fn)(x, xb)
+    assert count_primitive(jaxpr.jaxpr, "pallas_call") == 1
+    assert count_primitive(jaxpr.jaxpr, "scan") == 0
+
+
+# ---------------------------------------------------------------------------
+# donation of the scanned carry
+# ---------------------------------------------------------------------------
+
+
+def test_scan_carry_is_donated_in_lowering():
+    # the carry pytree (arg 5 of the scan twin) must be marked as aliased
+    # to the outputs in the lowered HLO — that is what lets the loop state
+    # live in place on device across the whole stream on TPU/GPU
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("sig", MinHashSpec(k=16)),))
+    p = MinHash(k=16).init(jax.random.PRNGKey(1))
+    ops = api._check_operands(plan, {"sig": {"a": p["a"], "b": p["b"]}},
+                              None)
+    state = stream.init_state(plan, 4)
+    x = _h1v((4, 320))
+    lens = jnp.full((4,), 320, jnp.int32)
+    txt = stream._scan_donated.lower(
+        plan, True, None, (), 5, state, x, None, lens, ops).as_text()
+    assert "tf.aliasing_output" in txt
+    plain = stream._scan_plain.lower(
+        plan, True, None, (), 5, state, x, None, lens, ops).as_text()
+    assert "tf.aliasing_output" not in plain
+
+
+def test_donate_auto_resolves_by_backend():
+    # "auto" donates exactly on backends whose runtime honors donation —
+    # the scan executor's twin selection mirrors stream.update's
+    expect = jax.default_backend() in stream._DONATABLE_BACKENDS
+    assert stream._resolve_donate("auto") is expect
+    assert stream._resolve_donate(None) is expect
+    assert stream._resolve_donate(True) is True
+    assert stream._resolve_donate(False) is False
+
+
+# ---------------------------------------------------------------------------
+# compile-count: never retraces across stream lengths
+# ---------------------------------------------------------------------------
+
+
+def _scan_traces():
+    return (stream._scan_plain._cache_size()
+            + stream._scan_donated._cache_size())
+
+
+def test_update_many_never_retraces_across_stream_lengths():
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("sig", MinHashSpec(k=16)),))
+    p = MinHash(k=16).init(jax.random.PRNGKey(1))
+    ops = {"sig": {"a": p["a"], "b": p["b"]}}
+    T, B, C = 4, 3, 32
+    state = stream.init_state(plan, B)
+    state = stream.update_many(plan, state, _h1v((T, B, C)), operands=ops)
+    before = _scan_traces()
+    # streams of wildly different total lengths: 1 block, 5 blocks, 23
+    # blocks — same (T, B, C) executor, zero retraces
+    for n_blocks in (1, 5, 23):
+        st = stream.init_state(plan, B)
+        for blk in range(n_blocks):
+            st = stream.update_many(plan, st, _h1v((T, B, C), seed=blk),
+                                    operands=ops)
+    assert _scan_traces() == before
+
+
+def test_run_stream_pinned_n_chunks_shares_one_trace():
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("sig", MinHashSpec(k=16)),))
+    p = MinHash(k=16).init(jax.random.PRNGKey(1))
+    ops = {"sig": {"a": p["a"], "b": p["b"]}}
+    stream.run_stream(plan, _h1v((3, 512)), chunk_s=64, operands=ops,
+                      executor="scan", n_chunks=8)
+    before = _scan_traces()
+    for S in (100, 300, 512):        # any length up to n_chunks * chunk_s
+        x = _h1v((3, 512))[:, :S]
+        stream.run_stream(plan, x, chunk_s=64, operands=ops,
+                          executor="scan", n_chunks=8,
+                          n_windows=jnp.full((3,), S - 7, jnp.int32))
+        # parity at every pinned length, not just trace reuse
+        np.testing.assert_array_equal(
+            np.asarray(stream.run_stream(
+                plan, x, chunk_s=64, operands=ops, executor="scan",
+                n_chunks=8)["sig"]),
+            np.asarray(api.run(plan, x, operands=ops)["sig"]))
+    assert _scan_traces() == before
+
+
+# ---------------------------------------------------------------------------
+# update_many / feed == a sequence of single-chunk updates
+# ---------------------------------------------------------------------------
+
+
+def test_update_many_equals_chunkwise_updates():
+    plan = _plan("cyclic")
+    ops = _operands()
+    T, B, C = 6, 3, 48
+    chunks = _h1v((T, B, C))
+    chunks_b = _h1v((T, B, C), seed=4)
+    rng = np.random.default_rng(0)
+    lens = rng.integers(0, C + 1, size=(T, B)).astype(np.int32)
+    st_many = stream.init_state(plan, B)
+    st_many = stream.update_many(plan, st_many, chunks, chunk_b=chunks_b,
+                                 lengths=lens, operands=ops)
+    st_loop = stream.init_state(plan, B)
+    for t in range(T):
+        st_loop = stream.update(plan, st_loop, chunks[t],
+                                chunk_b=chunks_b[t], lengths=lens[t],
+                                operands=ops)
+    _assert_same(stream.finalize(plan, st_many),
+                 stream.finalize(plan, st_loop))
+
+
+def test_update_many_validation():
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("sig", MinHashSpec(k=16)),))
+    p = MinHash(k=16).init(jax.random.PRNGKey(1))
+    ops = {"sig": {"a": p["a"], "b": p["b"]}}
+    state = stream.init_state(plan, 2)
+    with pytest.raises(ValueError, match=r"chunks must be \(T, B, C\)"):
+        stream.update_many(plan, state, _h1v((2, 16)), operands=ops)
+    with pytest.raises(ValueError, match="do not pass 'init'"):
+        stream.update_many(plan, state, _h1v((3, 2, 16)),
+                           operands={"sig": {**ops["sig"],
+                                             "init": state["sketch"]["sig"]}})
+    with pytest.raises(ValueError, match="lengths shape"):
+        stream.update_many(plan, state, _h1v((3, 2, 16)),
+                           lengths=jnp.zeros((2,)), operands=ops)
+    with pytest.raises(ValueError, match="lengths must be <= 16"):
+        stream.update_many(plan, state, _h1v((3, 2, 16)),
+                           lengths=jnp.full((3, 2), 99), operands=ops)
+    with pytest.raises(ValueError, match="chunk rows 4 > stream state"):
+        stream.update_many(plan, state, _h1v((3, 4, 16)), operands=ops)
+
+
+def test_feed_double_buffered_matches_one_shot():
+    plan = SketchPlan(HashSpec(family="cyclic", n=8),
+                      (("sig", MinHashSpec(k=16)), ("card", HLLSpec(b=4))))
+    p = MinHash(k=16).init(jax.random.PRNGKey(1))
+    ops = {"sig": {"a": p["a"], "b": p["b"]}}
+    B, S, T, C = 3, 600, 4, 32      # 600 symbols -> 19 chunks -> 5 blocks
+    x = _h1v((B, S))
+    sym = np.full((B,), S, np.int64)
+
+    def blocks():
+        n_chunks = -(-S // C)
+        for blk in range(-(-n_chunks // T)):
+            toks = np.zeros((T, B, C), np.uint32)
+            lens = np.zeros((T, B), np.int32)
+            for t in range(T):
+                lo = (blk * T + t) * C
+                v = int(np.clip(S - lo, 0, C))
+                if v:
+                    toks[t, :, :v] = np.asarray(x[:, lo : lo + v])
+                    lens[t, :] = v
+            yield toks, lens
+
+    state = stream.init_state(plan, B)
+    d0 = stream.dispatch_count()
+    state = stream.feed(plan, blocks(), state, operands=ops)
+    assert stream.dispatch_count() - d0 == 5        # one per block
+    got = stream.finalize(plan, state)
+    want = api.run(plan, x, operands=ops)
+    _assert_same(got, want)
+
+
+# ---------------------------------------------------------------------------
+# consumers' block APIs
+# ---------------------------------------------------------------------------
+
+
+def test_stats_update_stream_many_equals_chunkwise():
+    from repro.data.stats import NgramStats, StatsConfig
+    st = NgramStats(StatsConfig(vocab=4096))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 4096, size=(4, 384)).astype(np.uint32)
+    want = st.update(st.init_state(), toks)
+    block = np.stack([toks[:, c : c + 48] for c in range(0, 384, 48)])
+    ss = st.init_stream(4)
+    ss = st.update_stream_many(ss, block)
+    got = st.finalize_stream(ss)
+    for k in ("hll", "cms", "tokens"):
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]))
+
+
+def test_decontam_update_stream_many_equals_chunkwise():
+    from repro.data.decontam import DecontamConfig, Decontaminator
+    dc = Decontaminator(DecontamConfig(log2_m=14, vocab=4096,
+                                       max_hit_frac=0.15))
+    rng = np.random.default_rng(4)
+    ev = rng.integers(0, 4096, size=(4, 64)).astype(np.uint32)
+    dc.add_eval_set(ev)
+    batch = rng.integers(0, 4096, size=(5, 256)).astype(np.uint32)
+    batch[0, :64] = ev[0]
+    want = np.asarray(dc.contamination(batch))
+    block = np.stack([batch[:, c : c + 32] for c in range(0, 256, 32)])
+    ss = dc.init_stream(5)
+    ss = dc.update_stream_many(ss, block)
+    got = dc.finalize_stream(ss)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert got[0] > dc.cfg.max_hit_frac
