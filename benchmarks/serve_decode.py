@@ -1,0 +1,188 @@
+"""Decode-time n-gram plane: fused one-dispatch step vs per-step jnp (PR 7).
+
+Three implementations of the SAME decode epilogue (no-repeat hash + Bloom
+probe + mask + greedy sample + state advance), parity-asserted token-exact
+before timing:
+
+* **eager** — the pre-PR 7 serving chain: an unjitted per-step jnp op
+  sequence (rotate, XOR-broadcast, probe gather, mask, argmax, rolling
+  update) plus the engine's per-step ``int(banned.sum())`` host sync.
+  ~15 device dispatches + one device->host pull per decode step.
+* **legacy_jit** — the PR 7 satellite: the same chain with the
+  ``banned``/``update`` pair jitted once (``serve.engine._legacy_banned``/
+  ``_legacy_update``) and the h1 table hoisted; the host sync remains.
+* **fused** — the decode plane: ``SessionPool.step`` runs mask + sample +
+  advance + telemetry as ONE jitted dispatch (the Pallas epilogue on TPU,
+  its single-graph oracle on CPU), counters accumulated on device — zero
+  per-step host syncs.
+
+Sweep: vocab 32k/128k x 64..4096 sessions (the big points gated by scale),
+plus the 1024-session point on a d8 mesh vs d1. The acceptance floor —
+fused >= 2x eager at vocab 32k with 1024 sessions — is asserted, not just
+recorded.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import shard
+from repro.kernels.plan import DecodeSpec
+from repro.serve import sessions as sess
+from repro.serve.engine import _legacy_banned, _legacy_update
+
+
+def _timeit(fn, reps=3):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# -- the pre-PR 7 chain, reproduced verbatim (eager, per-step host sync) ----
+
+def _eager_probes(h, log2_m):
+    h2 = h * np.uint32(0x9E3779B9) | np.uint32(1)
+    i = jnp.arange(2, dtype=jnp.uint32)
+    return (h[..., None] + i * h2[..., None]) & np.uint32((1 << log2_m) - 1)
+
+
+def _eager_banned(spec, state, h1):
+    cand = jnp.uint32(
+        (state["prefix_hash"] << 1) | (state["prefix_hash"] >> 31)
+    )[:, None] ^ h1[None, :]
+    p = _eager_probes(cand & np.uint32(spec.hash_mask), spec.log2_m)
+    word, bit = p >> np.uint32(5), p & np.uint32(31)
+    flat = word.reshape(word.shape[0], -1).astype(jnp.int32)
+    got = jnp.take_along_axis(state["bloom"], flat, axis=1).reshape(word.shape)
+    hits = jnp.all((got >> bit) & 1 == 1, axis=-1)
+    return hits & (state["count"] >= spec.n - 1)[:, None]
+
+
+def _eager_update(spec, state, h1, token):
+    h1v = h1[token]
+    new_hash = jnp.uint32((state["prefix_hash"] << 1)
+                          | (state["prefix_hash"] >> 31)) ^ h1v
+    count = state["count"] + 1
+    full = count >= spec.n
+    p = _eager_probes(new_hash & np.uint32(spec.hash_mask), spec.log2_m)
+    word, bit = p >> np.uint32(5), p & np.uint32(31)
+    mask0 = jnp.zeros_like(state["bloom"])
+    for j in range(p.shape[-1]):
+        onehot = (jnp.arange(state["bloom"].shape[-1],
+                             dtype=jnp.uint32)[None, :] == word[:, j:j + 1])
+        mask0 = mask0 | jnp.where(onehot, np.uint32(1) << bit[:, j:j + 1], 0)
+    bloom = jnp.where(full[:, None], state["bloom"] | mask0, state["bloom"])
+    r = (spec.n - 1) % 32
+    oldest = state["window"][:, 0]
+    rot = jnp.uint32((oldest << r) | (oldest >> (32 - r))) if r else oldest
+    prefix = jnp.where(full, new_hash ^ rot, new_hash)
+    window = jnp.concatenate([state["window"][:, 1:], h1v[:, None]], axis=1)
+    return {"prefix_hash": prefix, "window": window, "bloom": bloom,
+            "count": count}
+
+
+def _legacy_state(spec, C):
+    return {"prefix_hash": jnp.zeros((C,), jnp.uint32),
+            "window": jnp.zeros((C, spec.n - 1), jnp.uint32),
+            "bloom": jnp.zeros((C, spec.n_words), jnp.uint32),
+            "count": jnp.zeros((C,), jnp.int32)}
+
+
+def _chain_loop(spec, C, h1, logits, steps, banned_fn, update_fn):
+    """The per-step jnp serving loop: mask -> greedy sample -> update, with
+    the engine's per-step host sync of the banned count."""
+    state = _legacy_state(spec, C)
+    synced = 0
+    token = None
+    for _ in range(steps):
+        banned = banned_fn(spec, state, h1)
+        synced += int(banned.sum())          # the pre-PR per-step host pull
+        lg = jnp.where(banned, -1e30, logits)
+        token = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        state = update_fn(spec, state, h1, token)
+    jax.block_until_ready(token)
+    return token, state
+
+
+def _pool_loop(spec, C, h1, logits, steps, mesh=None):
+    pool = sess.SessionPool(spec, C, h1, mesh=mesh)
+    pool.admit(C)
+    token = None
+    for _ in range(steps):
+        token = pool.step(logits, temperature=0.0)
+    jax.block_until_ready(token)
+    return token, pool
+
+
+def run(scale: float = 1.0):
+    spec = DecodeSpec(n=4, L=32, log2_m=14, k=2)
+    rows = []
+    steps = 4
+    points = [(32768, 64), (32768, 256), (32768, 1024)]
+    if scale >= 1.0:
+        points += [(32768, 4096), (131072, 64), (131072, 256)]
+    rng = np.random.default_rng(0)
+    for V, C in points:
+        h1 = jnp.asarray(rng.integers(0, 2**32, size=V, dtype=np.uint32))
+        logits = jnp.asarray(rng.standard_normal((C, V)), jnp.float32)
+        # the eager chain materializes (C, V, k) probe tensors per op per
+        # step — at the big sweep points one step is seconds, so it gets a
+        # single timed pass (best-of stays for the cheap chains)
+        big = C * V >= 32768 * 1024
+        psteps, esteps, ereps = (1, 1, 1) if big else (2, steps, 2)
+        # parity before timing: all three chains sample identical tokens
+        te, _ = _chain_loop(spec, C, h1, logits, psteps, _eager_banned,
+                            _eager_update)
+        tj, _ = _chain_loop(spec, C, h1, logits, psteps, _legacy_banned,
+                            _legacy_update)
+        tf, _ = _pool_loop(spec, C, h1, logits, psteps)
+        assert np.array_equal(np.asarray(te), np.asarray(tj)), (V, C)
+        assert np.array_equal(np.asarray(te), np.asarray(tf)), (V, C)
+
+        t_eager = _timeit(lambda: _chain_loop(
+            spec, C, h1, logits, esteps, _eager_banned, _eager_update),
+            reps=ereps) / esteps
+        t_jit = _timeit(lambda: _chain_loop(
+            spec, C, h1, logits, steps, _legacy_banned,
+            _legacy_update)) / steps
+        t_fused = _timeit(lambda: _pool_loop(
+            spec, C, h1, logits, steps)) / steps
+        tag = f"serve_decode_v{V // 1024}k_s{C}"
+        rows.append({"name": f"{tag}_eager", "us_per_call": t_eager * 1e6,
+                     "derived": "per-step jnp + host sync (pre-PR baseline)"})
+        rows.append({"name": f"{tag}_legacy_jit", "us_per_call": t_jit * 1e6,
+                     "derived": f"jitted banned/update pair; "
+                                f"{t_eager / t_jit:.2f}x eager"})
+        rows.append({"name": f"{tag}_fused", "us_per_call": t_fused * 1e6,
+                     "derived": f"one-dispatch SessionPool.step; "
+                                f"{t_eager / t_fused:.2f}x eager"})
+        if (V, C) == (32768, 1024):
+            # the PR 7 acceptance floor, asserted so a regression fails the
+            # bench run instead of silently shipping a slower plane
+            assert t_eager / t_fused >= 2.0, (
+                f"fused decode step must be >= 2x the per-step jnp baseline "
+                f"at vocab 32k / 1024 sessions, got {t_eager / t_fused:.2f}x")
+            if len(jax.devices()) >= 8:
+                mesh = shard.data_mesh(8)
+                tm, _ = _pool_loop(spec, C, h1, logits, 2, mesh=mesh)
+                assert np.array_equal(np.asarray(te), np.asarray(tm))
+                t_d8 = _timeit(lambda: _pool_loop(
+                    spec, C, h1, logits, steps, mesh=mesh)) / steps
+                rows.append({"name": f"{tag}_fused_d8",
+                             "us_per_call": t_d8 * 1e6,
+                             "derived": f"row-sharded pool, 8 shards; "
+                                        f"{t_fused / t_d8:.2f}x d1"})
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

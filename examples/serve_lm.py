@@ -33,5 +33,9 @@ for b in range(4):
           f"3-grams; with hash filter {repeated_ngrams(out_guard[b])}")
 print(f"\ncandidates banned by the rolling-hash filter: "
       f"{stats['banned_candidates']}")
+t = stats["telemetry"]   # accumulated on device by the fused decode plane
+print(f"decode-plane telemetry: banned_rate={t['banned_rate']:.2e} "
+      f"bloom_fill_mean={t['bloom_fill_mean']:.4f} "
+      f"pool dispatches={t['dispatches']}")
 assert all(repeated_ngrams(out_guard[b]) == 0 for b in range(4))
 print("OK — no 3-gram repeated under the filter")

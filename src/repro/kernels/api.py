@@ -50,8 +50,8 @@ import numpy as np
 
 from repro.kernels import ref as _ref
 from repro.kernels import sketch_fused as _sf
-from repro.kernels.plan import (BloomSpec, CountMinSpec, HashSpec, HLLSpec,
-                                MinHashSpec, SketchPlan)
+from repro.kernels.plan import (BloomSpec, CountMinSpec, DecodeSpec, HashSpec,
+                                HLLSpec, MinHashSpec, SketchPlan)
 
 _IMPLS = ("auto", "pallas", "ref")
 
@@ -272,6 +272,74 @@ def shape_outputs(plan: SketchPlan, out: Dict[str, jnp.ndarray],
         else:                        # HLL registers / CountMin partial table
             results[name] = o
     return results
+
+
+def decode(spec: DecodeSpec, logits, prefix, ready, bloom, h1, *,
+           canary_bits=None, impl: str = "auto", **tile_kw) -> Dict[str, jnp.ndarray]:
+    """Decode-time n-gram plane: hash every candidate continuation, probe
+    the per-session no-repeat filter (and the optional shared decontam
+    canary), and mask the logits — ONE fused device pass.
+
+    Args:
+      spec: static :class:`~repro.kernels.plan.DecodeSpec` (trace key).
+      logits: (B, V) float logits tile for this decode step.
+      prefix: (B,) uint32 rolling prefix hashes (last n-1 tokens).
+      ready: (B,) bool/int — session has >= n-1 symbols of history (a
+        not-ready session bans nothing and registers no canary hits).
+      bloom: (B, 2^log2_m/32) uint32 packed per-session filters.
+      h1: (V,) uint32 symbol hashes (masked to L bits here).
+      canary_bits: (2^canary_log2_m/32,) uint32 shared filter, required iff
+        ``spec.has_canary``.
+      impl: ``"auto"`` (Pallas on TPU, jnp oracle elsewhere) / ``"pallas"``
+        / ``"ref"`` — same dispatch contract as :func:`run`.
+
+    Returns ``{"logits": (B, V) banned-masked logits, "banned":
+    (B, ceil(V/32)) uint32 packed mask[, "canary": packed hit mask]}``.
+    Traceable: safe to call inside a caller's jit / shard_map region (shape
+    checks only — they see concrete shapes under tracing too).
+    """
+    if not isinstance(spec, DecodeSpec):
+        raise TypeError(f"spec must be a DecodeSpec, got {type(spec)}")
+    ref_path = use_ref(impl)
+    logits = jnp.asarray(logits)
+    if logits.ndim != 2:
+        raise ValueError(f"logits must be (B, V), got shape {logits.shape}")
+    B, V = logits.shape
+    prefix = jnp.asarray(prefix, jnp.uint32)
+    ready = jnp.asarray(ready)
+    for name, arr in (("prefix", prefix), ("ready", ready)):
+        if arr.shape != (B,):
+            raise ValueError(f"{name} shape {arr.shape} != batch ({B},)")
+    bloom = jnp.asarray(bloom, jnp.uint32)
+    if bloom.shape != (B, spec.n_words):
+        raise ValueError(f"bloom words shape {bloom.shape} != "
+                         f"({B}, {spec.n_words}) for log2_m={spec.log2_m}")
+    h1 = jnp.asarray(h1, jnp.uint32)
+    if h1.shape != (V,):
+        raise ValueError(f"h1 shape {h1.shape} != vocab ({V},)")
+    if spec.L < 32:
+        h1 = h1 & np.uint32((1 << spec.L) - 1)
+    if spec.has_canary:
+        if canary_bits is None:
+            raise ValueError("spec has a decontam canary filter: pass "
+                             "canary_bits (2^canary_log2_m/32,)")
+        canary_bits = jnp.asarray(canary_bits, jnp.uint32)
+        if canary_bits.shape != (spec.canary_words,):
+            raise ValueError(f"canary_bits shape {canary_bits.shape} != "
+                             f"({spec.canary_words},) for canary_log2_m="
+                             f"{spec.canary_log2_m}")
+    elif canary_bits is not None:
+        raise ValueError("canary_bits given but spec.canary_log2_m == 0")
+    if ref_path:
+        return _ref.decode_masks_ref(
+            logits, prefix, ready, bloom, h1, n=spec.n, L=spec.L,
+            hash_mask=spec.hash_mask, log2_m=spec.log2_m, k=spec.k,
+            canary_bits=canary_bits, canary_log2_m=spec.canary_log2_m,
+            canary_k=spec.canary_k)
+    from repro.kernels import decode as _dk
+    return _dk.decode_masks_fused(logits, prefix, ready, bloom, h1,
+                                  spec=spec, canary_bits=canary_bits,
+                                  interpret=not on_tpu(), **tile_kw)
 
 
 def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,

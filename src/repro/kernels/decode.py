@@ -1,0 +1,178 @@
+"""Pallas decode epilogue: fused no-repeat/decontam masking over the logits
+tile.
+
+The paper's recursive CYCLIC family makes decode-time n-gram control nearly
+free: with the rolling prefix hash ``h_prefix`` of the last n-1 generated
+tokens in hand, the hash of EVERY candidate continuation is
+
+    h_cand(v) = rotl(h_prefix, 1) XOR h1[v]          for all v at once
+
+— one rotate, one XOR-broadcast, O(vocab) bitwise ops instead of a re-hash
+of the window per candidate. The serving engine used to run this as a chain
+of per-step jnp dispatches (hash broadcast, probe gather, mask, where);
+:func:`decode_masks_fused` folds the whole epilogue into ONE kernel pass
+over the logits tile:
+
+* rotate + XOR-broadcast against the h1 tile (the candidate hashes),
+* the Theorem-2 discard — probes derive from ``h_cand & hash_mask``, never
+  from the n-1 dependent high bits (``DecodeSpec.out_bits``),
+* k double-hashed probes against the session's packed no-repeat Bloom row,
+* optionally the same probes against a SHARED decontam canary filter
+  (training-set leakage telemetry on live traffic),
+* the banned-logit substitution itself (``-1e30`` where banned & ready),
+
+emitting the masked logits plus bit-packed banned/canary masks (uint32, 32
+candidates per word — the masks round-trip HBM at 1/32nd the logits size).
+
+Grid/tiling: ``(B/block_b, V/block_v)``; every tile is independent (no
+cross-step scratch — the plane is embarrassingly parallel over sessions AND
+candidates), so the kernel needs no accumulator lifecycle. Per grid step the
+session rows' filter words (block_b, m/32) and the h1 tile (block_v,) are
+VMEM-resident; the shared canary filter rides along whole (its 2^log2_m/32
+words are replicated across sessions by construction).
+
+The jnp oracle is :func:`repro.kernels.ref.decode_masks_ref`; bit-parity is
+asserted across n (including the degraded n > L regime), vocab sizes and
+device counts in ``tests/test_serve_plane.py``. Dispatch through
+:func:`repro.kernels.api.decode` (impl="auto" keeps CPU hosts on the oracle
+graph, exactly like the sketch engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _kref
+from repro.kernels.cyclic import _rotl_const
+from repro.kernels.plan import DecodeSpec
+
+_U32 = jnp.uint32
+
+
+def _probe_hits_tile(h, words, k: int, log2_m: int, per_row: bool):
+    """All-k-probes-set membership for one (block_b, block_v) tile of masked
+    candidate hashes; mirrors ``ref.bloom_probe_hits`` bit-for-bit."""
+    stride = (h * _kref.BLOOM_STRIDE) | np.uint32(1)
+    m_mask = np.uint32((1 << log2_m) - 1)
+    hit = jnp.ones(h.shape, dtype=jnp.bool_)
+    for i in range(k):
+        probe = (h + np.uint32(i) * stride) & m_mask
+        word = (probe >> np.uint32(5)).astype(jnp.int32)
+        bit = probe & np.uint32(31)
+        if per_row:
+            got = jnp.take_along_axis(words, word, axis=1)
+        else:
+            got = jnp.take(words, word.reshape(-1), axis=0).reshape(word.shape)
+        hit = hit & (((got >> bit) & np.uint32(1)) == 1)
+    return hit
+
+
+def _pack_tile(mask):
+    """(block_b, block_v) bool -> (block_b, block_v/32) uint32 (block_v is
+    validated to be a multiple of 32)."""
+    bb, bv = mask.shape
+    m = mask.reshape(bb, bv // 32, 32).astype(_U32)
+    bitpos = jax.lax.broadcasted_iota(_U32, m.shape, 2)
+    return jnp.sum(m << bitpos, axis=-1).astype(_U32)
+
+
+def _decode_kernel(*refs, spec: DecodeSpec, V: int, block_v: int):
+    has_canary = spec.has_canary
+    (logits_ref, prefix_ref, ready_ref, bloom_ref, h1_ref) = refs[:5]
+    pos = 5
+    canary_ref = None
+    if has_canary:
+        canary_ref = refs[pos]
+        pos += 1
+    out_logits_ref = refs[pos]
+    banned_ref = refs[pos + 1]
+    canary_out_ref = refs[pos + 2] if has_canary else None
+
+    j = pl.program_id(1)
+    # the candidate hashes: rotate once, XOR-broadcast the h1 tile
+    rot = _rotl_const(prefix_ref[...], 1, spec.L)            # (block_b, 1)
+    cand = rot ^ h1_ref[...][None, :]                        # (block_b, block_v)
+    h = cand & np.uint32(spec.hash_mask)                     # Theorem-2 discard
+    # candidates beyond the true vocab are padding: never banned, never hits
+    col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+    live = (col < V) & (ready_ref[...] != 0)                 # (bb, bv)
+
+    banned = _probe_hits_tile(h, bloom_ref[...], spec.k, spec.log2_m,
+                              per_row=True) & live
+    out_logits_ref[...] = jnp.where(banned, _kref.NEG_LOGIT, logits_ref[...])
+    banned_ref[...] = _pack_tile(banned)
+    if has_canary:
+        hits = _probe_hits_tile(h, canary_ref[...], spec.canary_k,
+                                spec.canary_log2_m, per_row=False) & live
+        canary_out_ref[...] = _pack_tile(hits)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block_b", "block_v",
+                                             "interpret"))
+def decode_masks_fused(logits, prefix, ready, bloom, h1, *,
+                       spec: DecodeSpec, canary_bits=None, block_b: int = 8,
+                       block_v: int = None, interpret: bool = False) -> dict:
+    """ONE kernel pass: candidate hashing + Bloom probing + logit masking.
+
+    logits (B, V) f32, prefix (B,) uint32, ready (B,) bool/int, bloom
+    (B, 2^log2_m/32) uint32 per-session filters, h1 (V,) uint32 (pre-masked
+    to L bits by ``api.decode``), canary_bits (2^canary_log2_m/32,) uint32
+    shared filter iff ``spec.has_canary`` -> ``{"logits", "banned"[,
+    "canary"]}`` exactly as :func:`repro.kernels.ref.decode_masks_ref`.
+    """
+    B, V = logits.shape
+    if block_v is None:
+        block_v = min(512, max(32, 1 << int(np.ceil(np.log2(max(V, 1))))))
+    if block_v % 32:
+        raise ValueError(f"block_v must be a multiple of 32 (packed-mask "
+                         f"words), got {block_v}")
+    Bp = -(-B // block_b) * block_b
+    Vp = -(-V // block_v) * block_v
+    lg = jnp.pad(logits.astype(jnp.float32), ((0, Bp - B), (0, Vp - V)))
+    pf = jnp.pad(prefix.astype(_U32), (0, Bp - B))[:, None]
+    rd = jnp.pad(ready.astype(jnp.int32), (0, Bp - B))[:, None]
+    bw = jnp.pad(bloom.astype(_U32), ((0, Bp - B), (0, 0)))
+    hv = jnp.pad(h1.astype(_U32), (0, Vp - V))
+
+    tile = pl.BlockSpec((block_b, block_v), lambda bi, j: (bi, j),
+                        memory_space=pltpu.VMEM)
+    row = lambda w: pl.BlockSpec((block_b, w), lambda bi, j: (bi, 0),
+                                 memory_space=pltpu.VMEM)
+    vtile = pl.BlockSpec((block_v,), lambda bi, j: (j,),
+                         memory_space=pltpu.VMEM)
+    ptile = pl.BlockSpec((block_b, block_v // 32), lambda bi, j: (bi, j),
+                         memory_space=pltpu.VMEM)
+
+    in_specs = [tile, row(1), row(1), row(spec.n_words), vtile]
+    inputs = [lg, pf, rd, bw, hv]
+    if spec.has_canary:
+        assert canary_bits is not None
+        in_specs.append(pl.BlockSpec((spec.canary_words,), lambda bi, j: (0,),
+                                     memory_space=pltpu.VMEM))
+        inputs.append(canary_bits.astype(_U32))
+    out_specs = [tile, ptile]
+    out_shapes = [jax.ShapeDtypeStruct((Bp, Vp), jnp.float32),
+                  jax.ShapeDtypeStruct((Bp, Vp // 32), _U32)]
+    if spec.has_canary:
+        out_specs.append(ptile)
+        out_shapes.append(jax.ShapeDtypeStruct((Bp, Vp // 32), _U32))
+
+    outs = pl.pallas_call(
+        functools.partial(_decode_kernel, spec=spec, V=V, block_v=block_v),
+        grid=(Bp // block_b, Vp // block_v),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes),
+        interpret=interpret,
+    )(*inputs)
+
+    W = -(-V // 32)
+    results = {"logits": outs[0][:B, :V], "banned": outs[1][:B, :W]}
+    if spec.has_canary:
+        results["canary"] = outs[2][:B, :W]
+    return results

@@ -236,6 +236,92 @@ class CountMinSpec:
         return self.log2_width <= self.in_kernel_max_log2_width
 
 
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """The decode-time n-gram plane: per-session no-repeat Bloom probing
+    plus an optional shared decontam-canary filter, fused into the logits
+    tile pass (:func:`repro.kernels.api.decode`).
+
+    The recursive CYCLIC structure prices every candidate continuation at
+    O(1) bitwise ops — ``h_cand = rotl(h_prefix, 1) XOR h1[v]`` for all v
+    simultaneously — so one spec describes hashing the *entire vocabulary*
+    per decode step. Probe derivation applies the paper's dependent-bit
+    discard (Theorem 2: only ``L - n + 1`` consecutive bits of a CYCLIC
+    window hash are pairwise independent): probes draw from
+    ``h & hash_mask``, never from the n-1 dependent high bits.
+
+    ``n > L`` is accepted but **degraded**: rotation amounts alias mod L, so
+    windows whose symbols sit L positions apart collide structurally and no
+    discard width is left (``out_bits`` falls back to the full L with zero
+    pairwise guarantee). The recursion itself stays exact — see
+    ``serve.engine.NoRepeatNgram`` — so callers opting in still get
+    no-false-negative banning, just an unbounded false-positive excess.
+
+    Like the sketch specs this is a pure static declaration (hashable, a
+    jit trace key); the runtime arrays (h1 table, per-session filter words,
+    the shared canary filter) are arguments of ``api.decode``.
+    """
+
+    n: int = 4
+    L: int = 32
+    log2_m: int = 14          # per-session no-repeat Bloom bits
+    k: int = 2                # double-hashed probes per candidate
+    canary_log2_m: int = 0    # shared decontam canary filter; 0 = disabled
+    canary_k: int = 4
+
+    def __post_init__(self):
+        if self.n < 2:
+            raise ValueError(f"decode n must be >= 2 (an n-gram ban needs "
+                             f"at least a bigram), got {self.n}")
+        if not 1 <= self.L <= 32:
+            raise ValueError(f"L must be in [1, 32], got {self.L}")
+        if not 5 <= self.log2_m <= 24:
+            raise ValueError(
+                f"log2_m must be in [5, 24] (per-session filter), got "
+                f"{self.log2_m}")
+        if not 1 <= self.k <= 8:
+            raise ValueError(f"k must be in [1, 8], got {self.k}")
+        if self.canary_log2_m and not 5 <= self.canary_log2_m <= 30:
+            raise ValueError(f"canary_log2_m must be 0 (disabled) or in "
+                             f"[5, 30], got {self.canary_log2_m}")
+        if not 1 <= self.canary_k <= 8:
+            raise ValueError(f"canary_k must be in [1, 8], got {self.canary_k}")
+
+    @property
+    def degraded(self) -> bool:
+        """True when n > L: rotations alias mod L and no pairwise bits
+        remain — the ban is still exact on true repeats, the FP bound is not."""
+        return self.n > self.L
+
+    @property
+    def out_bits(self) -> int:
+        """Usable (pairwise-independent) bits probes may draw from."""
+        return self.L if self.degraded else self.L - self.n + 1
+
+    @property
+    def hash_mask(self) -> int:
+        """Low-bit keep mask applied to every candidate hash before probe
+        derivation (the Theorem-2 discard; full width when degraded)."""
+        return (1 << self.out_bits) - 1
+
+    @property
+    def m(self) -> int:
+        return 1 << self.log2_m
+
+    @property
+    def n_words(self) -> int:
+        """Packed uint32 words per session filter."""
+        return 1 << (self.log2_m - 5)
+
+    @property
+    def has_canary(self) -> bool:
+        return self.canary_log2_m > 0
+
+    @property
+    def canary_words(self) -> int:
+        return 1 << (self.canary_log2_m - 5) if self.has_canary else 0
+
+
 SketchSpec = Union[MinHashSpec, HLLSpec, BloomSpec, CountMinSpec]
 _SPEC_TYPES = (MinHashSpec, HLLSpec, BloomSpec, CountMinSpec)
 

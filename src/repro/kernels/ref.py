@@ -204,6 +204,83 @@ def bloom_fused_ref(h1va, h1vb, n_windows, bits, *, n: int, k: int,
     return _bloom_reduce(ha, hb, valid, bits, k, log2_m)
 
 
+# ---------------------------------------------------------------------------
+# Decode-time n-gram plane oracle (mirrors kernels/decode.py). The fused
+# Pallas decode epilogue is validated bit-for-bit against these; off-TPU
+# they are also the production path behind ``api.decode`` (one jit per
+# DecodeSpec, fused into the sampling graph).
+# ---------------------------------------------------------------------------
+
+# double-hashing stride constant (golden-ratio odd multiplier), shared by
+# oracle and kernel so the probe sequences are bit-identical
+BLOOM_STRIDE = np.uint32(0x9E3779B9)
+
+NEG_LOGIT = np.float32(-1e30)
+
+
+def pack_mask_u32(mask: jnp.ndarray) -> jnp.ndarray:
+    """(..., V) bool -> (..., ceil(V/32)) uint32, bit i of word w = column
+    32*w + i. V is padded with zero bits up to the word boundary."""
+    V = mask.shape[-1]
+    pad = -V % 32
+    if pad:
+        mask = jnp.pad(mask, ((0, 0),) * (mask.ndim - 1) + ((0, pad),))
+    m = mask.reshape(mask.shape[:-1] + (-1, 32)).astype(_U32)
+    weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))
+    return jnp.sum(m * weights, axis=-1).astype(_U32)
+
+
+def bloom_probe_hits(h, words, k: int, log2_m: int) -> jnp.ndarray:
+    """All-k-probes-set membership of masked hashes ``h`` (..., V) against
+    packed filters ``words`` — per-row filters (B, m/32) probed row-wise, or
+    one shared (m/32,) filter probed globally. Probe i is
+    ``(h + i * ((h * BLOOM_STRIDE) | 1)) & (m - 1)`` — double hashing with
+    an odd stride derived from the already-discarded hash, so the probe
+    sequence never touches the n-1 dependent bits."""
+    h = h.astype(_U32)
+    stride = (h * BLOOM_STRIDE) | np.uint32(1)
+    i = jnp.arange(k, dtype=_U32)
+    probes = (h[..., None] + i * stride[..., None]) & np.uint32((1 << log2_m) - 1)
+    word = (probes >> np.uint32(5)).astype(jnp.int32)
+    bit = probes & np.uint32(31)
+    if words.ndim == 1:                       # shared filter
+        got = words[word]
+    else:                                     # per-row filters
+        flat = word.reshape(word.shape[0], -1)
+        got = jnp.take_along_axis(words, flat, axis=1).reshape(word.shape)
+    return jnp.all(((got >> bit) & np.uint32(1)) == 1, axis=-1)
+
+
+def decode_masks_ref(logits, prefix, ready, bloom, h1, *, n: int, L: int,
+                     hash_mask: int, log2_m: int, k: int,
+                     canary_bits=None, canary_log2_m: int = 0,
+                     canary_k: int = 4) -> dict:
+    """Decode-plane oracle: one candidate hash per (session, token), probed
+    against the session's no-repeat filter and (optionally) the shared
+    decontam canary filter.
+
+    logits (B, V) f32, prefix (B,) uint32 rolling prefix hashes, ready (B,)
+    bool (the session has consumed >= n-1 symbols), bloom (B, 2^log2_m/32)
+    uint32 per-session filters, h1 (V,) uint32 symbol hashes ->
+    ``{"logits": (B, V) banned-masked logits, "banned": (B, ceil(V/32))
+    uint32 packed mask[, "canary": packed canary-hit mask]}``.
+
+    ``h_cand = rotl(prefix, 1) XOR h1[v]`` is the full-width recursive hash;
+    probes derive from ``h_cand & hash_mask`` (the Theorem-2 discard).
+    """
+    V = logits.shape[-1]
+    cand = _rotl_const(prefix.astype(_U32), 1, L)[:, None] ^ h1[None, :]
+    h = cand & np.uint32(hash_mask)
+    rdy = ready.astype(jnp.bool_)[:, None]      # a full n-gram needs n-1 history
+    banned = bloom_probe_hits(h, bloom, k, log2_m) & rdy
+    out = {"logits": jnp.where(banned, NEG_LOGIT, logits),
+           "banned": pack_mask_u32(banned)}
+    if canary_bits is not None:
+        out["canary"] = pack_mask_u32(
+            bloom_probe_hits(h, canary_bits, canary_k, canary_log2_m) & rdy)
+    return out
+
+
 def sketch_plan_ref(plan, h1v, h1v_b, n_windows, operands,
                     w_start=None) -> dict:
     """Single-jnp-graph executor for a SketchPlan: ONE rolling-hash

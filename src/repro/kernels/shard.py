@@ -194,6 +194,37 @@ def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
     return api.shape_outputs(plan, out, lead)
 
 
+def rowwise(fn, mesh: Mesh, n_row: int):
+    """Wrap a purely per-row function in ``shard_map`` over the data mesh.
+
+    ``fn(*args)`` must treat every leading array axis as independent rows:
+    the first ``n_row`` arguments (each may be a pytree of row-major arrays)
+    are sharded over the mesh axis, the remaining arguments are replicated,
+    and every output leaf comes back row-sharded. Because ``fn`` is per-row
+    by contract, no collective is needed (or emitted — the decode-plane
+    tests assert zero collective primitives in the jaxpr); ``check_rep`` is
+    off for the same reason the plan executor's is.
+
+    This is the serving plane's scale-out primitive: a session pool's carry
+    pytree and per-step logits are pure row state, so thousands of
+    concurrent sessions spread over the mesh with no combine step at all —
+    the one shape the sketch executor above (pmax/psum global state) does
+    not cover. Row counts must divide the shard count; callers own padding
+    (the pool sizes its capacity to the mesh at construction).
+    """
+    row, rep = P(AXIS), P()
+
+    def wrapped(*args):
+        if len(args) <= n_row:
+            raise ValueError(f"rowwise(fn, n_row={n_row}) called with only "
+                             f"{len(args)} argument(s)")
+        in_specs = tuple(row if i < n_row else rep for i in range(len(args)))
+        return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=row,
+                         check_rep=False)(*args)
+
+    return wrapped
+
+
 def run_auto(plan: SketchPlan, h1v: jnp.ndarray, *,
              mesh: Optional[Mesh] = None,
              data_shards: Optional[int] = None,

@@ -1,1 +1,9 @@
-"""Serving: prefill/decode engine with hash-based no-repeat-ngram sampling."""
+"""Serving: prefill/decode engine + the decode-time n-gram plane.
+
+`engine.ServeEngine` drives generation; `sessions.SessionPool` holds the
+per-session sketch state (rolling prefix hash, h1 ring, no-repeat Bloom)
+as a donated fixed-capacity carry and runs the fused decode epilogue
+(`kernels/decode.py` via `api.decode`) as one dispatch per step;
+`telemetry` reads the on-device counters (banned rate, Bloom fill,
+decontam-canary hits, dispatch counts).
+"""

@@ -1,0 +1,76 @@
+"""Decode-plane counter surface: what the serving plane is doing, cheaply.
+
+All per-step accounting lives ON DEVICE inside the pool's carry (uint32
+(lo, hi) pairs with explicit carry — the stats-plane idiom), so recording
+costs nothing extra per decode step: no host sync, no extra dispatch.
+This module is the read side — :func:`snapshot` pulls the carry to host
+ONCE and derives the operator-facing rates:
+
+* ``banned_rate``     — banned candidates per (step x vocab): how hard the
+  no-repeat plane is actually biting (Bloom false positives included; the
+  spec's log2_m/k set that excess).
+* ``bloom_fill``      — per-session filter occupancy; ``saturated`` counts
+  sessions past 50% fill, where the k-probe FP rate (fill^k) starts to
+  over-ban noticeably. The cure is a session `reset` or a bigger log2_m.
+* ``canary_hits``     — decode-time decontamination telemetry: candidate
+  tokens that would have completed an n-gram from the training canary set.
+* ``dispatches``      — device dispatches issued by the session pool
+  (steps + primes + churn), the serving twin of
+  ``kernels.stream.dispatch_count``; the one-dispatch-per-decode-step
+  property is asserted against it.
+
+``ServeEngine.generate`` returns a snapshot in its stats dict, and the
+benchmarks report it alongside the timing rows.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.serve import sessions as _sessions
+
+
+def u64(lo, hi) -> np.ndarray:
+    """Combine uint32 (lo, hi) counter pairs into host uint64 values."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(
+        lo, np.uint64)
+
+
+def bloom_fill(words) -> np.ndarray:
+    """(..., m/32) packed filter words -> (...,) fill fraction in [0, 1]."""
+    words = np.asarray(jax.device_get(words))
+    bits = np.unpackbits(words.view(np.uint8), axis=-1)
+    return bits.sum(axis=-1) / float(words.shape[-1] * 32)
+
+
+def dispatch_count() -> int:
+    """Device dispatches issued by the session pool (steps+primes+churn)."""
+    return _sessions.dispatch_count()
+
+
+def snapshot(pool) -> Dict[str, float]:
+    """One host pull of a :class:`~repro.serve.sessions.SessionPool`'s
+    telemetry. Rates are over ACTIVE sessions' lifetime decode steps."""
+    st = jax.device_get(pool.state)
+    active = st["active"] != 0
+    steps = u64(st["steps"], 0)
+    total_steps = int(steps[active].sum())
+    banned = u64(st["banned_lo"], st["banned_hi"])
+    canary = u64(st["canary_lo"], st["canary_hi"])
+    fill = bloom_fill(st["bloom"])
+    n_active = int(active.sum())
+    cand = total_steps * pool.vocab
+    return {
+        "active_sessions": n_active,
+        "decode_steps": total_steps,
+        "banned_candidates": int(banned[active].sum()),
+        "banned_rate": float(banned[active].sum() / cand) if cand else 0.0,
+        "canary_hits": int(canary[active].sum()),
+        "canary_rate": float(canary[active].sum() / cand) if cand else 0.0,
+        "bloom_fill_mean": float(fill[active].mean()) if n_active else 0.0,
+        "bloom_fill_max": float(fill[active].max()) if n_active else 0.0,
+        "saturated_sessions": int((fill[active] > 0.5).sum()),
+        "dispatches": dispatch_count(),
+    }

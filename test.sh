@@ -16,6 +16,11 @@
 #   parity subset (tests/test_stream_sharded.py), plus the sharded-train
 #   mesh tests, under the 8-virtual-device XLA flag.
 #
+# --serve — the decode-time serving plane only: the fused decode epilogue
+#   vs its jnp oracle, the session-pool carry (churn, donation, retrace),
+#   row-wise sharding parity and the engine integration
+#   (tests/test_serve*.py).
+#
 # --bench — the device-bench profile (per the olmax/HomebrewNLP exemplar
 #   harnesses): tcmalloc LD_PRELOAD when present (glibc malloc fragments
 #   under jax's large short-lived host buffers), allocator/report and
@@ -40,6 +45,11 @@ if [[ "${1:-}" == "--dist" ]]; then
   shift
   exec python -m pytest -x -q tests/test_shard.py tests/test_countmin.py \
     tests/test_stream_sharded.py tests/test_distributed.py "$@"
+fi
+if [[ "${1:-}" == "--serve" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_serve.py tests/test_serve_plane.py \
+    "$@"
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift
