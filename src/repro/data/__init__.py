@@ -1,1 +1,3 @@
-"""Data plane: synthetic corpora, packing, hash-dedup, decontam, telemetry."""
+"""Data plane: synthetic corpora, packing, hash-dedup, decontam, telemetry;
+durable snapshots (`durable.py`) and the fault-tolerant dedup service
+(`service.py`)."""

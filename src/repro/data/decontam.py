@@ -147,6 +147,44 @@ class Decontaminator:
                else np.asarray(lengths, np.int64).sum(axis=0))
         return {"stream": st, "seen": sstate["seen"] + got}
 
+    # -- durability ---------------------------------------------------------
+
+    def export_stream(self, sstate: dict) -> dict:
+        """Snapshot an open stream scan + everything its verdicts depend
+        on: BOTH family draws (the double-hashing probe positions are a
+        function of this process's h1 tables — the Bloom FPR analysis holds
+        only if restore re-binds them) and the eval-set filter itself, plus
+        the carry (hit counts, both rolling tails) and the host-side
+        per-row symbol totals. Mesh-independent."""
+        return {"params": {
+                    "pa": jax.tree_util.tree_map(np.asarray, self.pa),
+                    "pb": jax.tree_util.tree_map(np.asarray, self.pb),
+                    "bits": np.asarray(self.bits)},
+                "stream": stream.export_state(self.plan, sstate["stream"],
+                                              batch=len(sstate["seen"])),
+                "seen": np.asarray(sstate["seen"], np.int64)}
+
+    def rebind_params(self, params: dict) -> None:
+        """Adopt checkpointed family draws + eval-set filter (before any
+        state import); the jitted closures captured the old arrays as
+        constants, so they are re-wrapped."""
+        self.pa = jax.tree_util.tree_map(jnp.asarray, params["pa"])
+        self.pb = jax.tree_util.tree_map(jnp.asarray, params["pb"])
+        self.bits = jnp.asarray(params["bits"])
+        self._add = jax.jit(self._add_impl)
+        self._scan = jax.jit(self._scan_impl)
+        self._lookups = jax.jit(lambda t: (self.fam_a._lookup(self.pa, t),
+                                           self.fam_b._lookup(self.pb, t)))
+
+    def import_stream(self, tree: dict) -> dict:
+        """Rebuild a live stream scan from :meth:`export_stream`'s tree on
+        THIS instance's mesh (elastic across device counts)."""
+        self.rebind_params(tree["params"])
+        return {"stream": stream.import_state(self.plan, tree["stream"],
+                                              mesh=self.mesh,
+                                              data_shards=self.cfg.data_shards),
+                "seen": np.asarray(tree["seen"], np.int64)}
+
     def finalize_stream(self, sstate: dict) -> np.ndarray:
         """-> (B,) fraction of each stream's windows present in the eval
         set (0.0 for streams shorter than one window)."""

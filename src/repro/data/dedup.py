@@ -114,6 +114,42 @@ class DedupConfig:
     stream_donate: object = "auto"
 
 
+def pack_band(shard: Dict[bytes, List[int]]) -> Dict[str, np.ndarray]:
+    """One LSH band shard -> a flat pytree of arrays (checkpointable).
+
+    Keys and id lists are variable-length, so both are stored flattened
+    with offset vectors; insertion order is preserved exactly, which is
+    what makes a packed->unpacked index *bit-identical* in behaviour (probe
+    results are sets, but candidate id order feeds the first-wins verify
+    loop through ``sorted``, and future inserts must append in the same
+    order the live index would have).
+    """
+    keys = list(shard.keys())
+    key_off = np.zeros(len(keys) + 1, np.int64)
+    np.cumsum([len(k) for k in keys], out=key_off[1:])
+    ids = [shard[k] for k in keys]
+    id_off = np.zeros(len(keys) + 1, np.int64)
+    np.cumsum([len(v) for v in ids], out=id_off[1:])
+    return {
+        "key_bytes": (np.frombuffer(b"".join(keys), np.uint8)
+                      if keys else np.zeros((0,), np.uint8)),
+        "key_offsets": key_off,
+        "ids": (np.concatenate([np.asarray(v, np.int64) for v in ids])
+                if keys else np.zeros((0,), np.int64)),
+        "id_offsets": id_off,
+    }
+
+
+def unpack_band(tree) -> Dict[bytes, List[int]]:
+    """Inverse of :func:`pack_band` (order-preserving)."""
+    kb = np.asarray(tree["key_bytes"], np.uint8).tobytes()
+    ko = np.asarray(tree["key_offsets"], np.int64)
+    ids = np.asarray(tree["ids"], np.int64)
+    io = np.asarray(tree["id_offsets"], np.int64)
+    return {kb[ko[i]:ko[i + 1]]: [int(x) for x in ids[io[i]:io[i + 1]]]
+            for i in range(len(ko) - 1)}
+
+
 def _bucket(n: int) -> int:
     """Next power-of-two length >= n: O(log) distinct jit shapes (the
     bucketed fallback/baseline path only; the min-64 floor that papered
@@ -170,6 +206,20 @@ class BandShardedLSHIndex:
         """Register a kept document under its band keys (one per shard)."""
         for shard_b, kb in zip(self.shards, keys):
             shard_b.setdefault(kb, []).append(doc_id)
+
+    def pack(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """All band shards as a checkpointable pytree of arrays."""
+        return {f"band_{b:04d}": pack_band(s)
+                for b, s in enumerate(self.shards)}
+
+    @classmethod
+    def unpack(cls, tree, workers: int = 0) -> "BandShardedLSHIndex":
+        """Rebuild an index from :meth:`pack`'s tree. ``workers`` is a
+        runtime knob of the *new* process, not part of the state."""
+        idx = cls(len(tree), workers=workers)
+        idx.shards = [unpack_band(tree[f"band_{b:04d}"])
+                      for b in range(len(tree))]
+        return idx
 
     def probe(self, keys: Sequence[bytes]) -> set:
         """Union of the doc ids colliding with ``keys`` in any band."""
@@ -275,6 +325,55 @@ class MinHashDeduper:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    # -- durability ---------------------------------------------------------
+
+    def export_state(self) -> Dict:
+        """Everything a restart needs to continue *bit-identically*: the
+        sampled hash parameters (h1 table + MinHash remix lanes — the
+        paper's pairwise-independence guarantees hold only for THIS draw;
+        re-drawing against existing signatures silently voids the Jaccard
+        estimator) together with the signature store and the packed band
+        index. Host-side pytree of arrays — feed to ``data.durable``.
+        """
+        sigs = (np.stack([np.asarray(s, np.uint32) for s in self._sigs])
+                if self._sigs
+                else np.zeros((0, self.cfg.n_signatures), np.uint32))
+        return {"params": {
+                    "fam": jax.tree_util.tree_map(np.asarray, self.fam_params),
+                    "mh": jax.tree_util.tree_map(np.asarray, self.mh_params)},
+                "sigs": sigs,
+                "index": self._index.pack()}
+
+    def import_params(self, params: Dict) -> None:
+        """Re-bind the sampled hash parameters (BEFORE any state import —
+        signatures computed after restore must come from the checkpointed
+        draw, not this process's seed). The jitted signing closures captured
+        the old arrays as constants, so they are re-wrapped here."""
+        self.fam_params = jax.tree_util.tree_map(jnp.asarray, params["fam"])
+        self.mh_params = jax.tree_util.tree_map(jnp.asarray, params["mh"])
+        self._sig_fn = jax.jit(self._signature_batch_impl)
+        self._sig_one_fn = jax.jit(self._signature_unfused_impl)
+        self._lookup_fn = jax.jit(
+            lambda toks: self.fam._lookup(self.fam_params, toks))
+
+    def import_state(self, tree: Dict) -> None:
+        """Restore from :meth:`export_state`'s tree: params first, then the
+        signature store and band index (insertion order preserved, so the
+        restored deduper's future verdicts are bit-identical to one that
+        never restarted)."""
+        self.import_params(tree["params"])
+        sigs = np.asarray(tree["sigs"], np.uint32)
+        if sigs.ndim != 2 or sigs.shape[1] != self.cfg.n_signatures:
+            raise ValueError(f"sigs shape {sigs.shape} != (D, "
+                             f"{self.cfg.n_signatures})")
+        self._sigs = [sigs[i] for i in range(sigs.shape[0])]
+        if len(tree["index"]) != self.cfg.lsh_bands:
+            raise ValueError(f"index has {len(tree['index'])} bands, config "
+                             f"expects {self.cfg.lsh_bands}")
+        self._index.close()
+        self._index = BandShardedLSHIndex.unpack(tree["index"],
+                                                 workers=self.cfg.lsh_workers)
 
     # -- signing ------------------------------------------------------------
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data import durable
 from repro.data.corpus import CorpusSpec, documents
 from repro.data.dedup import DedupConfig, MinHashDeduper
 from repro.data.decontam import Decontaminator
@@ -115,3 +116,25 @@ class DataPlane:
             "docs_kept": self.corpus.n_docs_kept,
             "docs_deduped": self.corpus.n_duplicates,
         }
+
+    # -- durability ---------------------------------------------------------
+    # The corpus itself is stateless-resumable (batch_for_step is pure), so
+    # the only state a restart must carry is the stats sketch accumulator —
+    # and the sampled hash draw it was accumulated under.
+
+    def snapshot(self, directory: str, step: int, *, keep: int = 3,
+                 async_: bool = False, injector=None):
+        """Epoch-tagged atomic snapshot of the per-step data-plane state."""
+        tree = {"params": self.stats.export_params(),
+                "stats": jax.tree_util.tree_map(np.asarray, self.stats_state)}
+        return durable.save(tree, directory, step, keep=keep, async_=async_,
+                            injector=injector)
+
+    def restore(self, directory: str, epoch: Optional[int] = None) -> int:
+        """Adopt the newest (or given) snapshot: hash params re-bound
+        before the sketch state they produced. Returns the step restored
+        from (feed it back to :meth:`next_batch`)."""
+        tree, epoch = durable.load(directory, epoch)
+        self.stats.rebind_params(tree["params"])
+        self.stats_state = jax.tree_util.tree_map(jnp.asarray, tree["stats"])
+        return epoch

@@ -1,0 +1,514 @@
+"""DedupService: the band-sharded LSH index as a fault-tolerant service.
+
+`BandShardedLSHIndex` keeps every band shard in one process; this module
+deploys the same state across ``n_workers`` shard workers — band ``b``
+lives on worker ``b % n_workers`` (the same stateless placement rule as
+``pipeline.py``'s ``(seed, step, host_id, num_hosts)`` sampling: pure
+function of the ids, so elastic restore onto a different worker count is
+just re-evaluating it) — and wraps every probe/insert in the failure
+envelope a real deployment needs:
+
+* **scatter/gather probes** — a batch probe fans one group-by per band
+  across the owning workers and combines the shard results into per-doc
+  candidate sets *before* the sequential verify loop, so (exactly as in
+  the in-process index) the schedule cannot affect verdicts.
+* **timeout + capped exponential backoff** — each worker call is bounded
+  by ``probe_timeout_s``; transport-class failures (:class:`WorkerCrash`,
+  :class:`ProbeTimeout`, ``ConnectionError``) retry up to ``max_retries``
+  times with ``backoff_base_s * 2^attempt`` capped at ``backoff_cap_s``.
+  Probes are read-only and inserts idempotent (append of a known doc id is
+  deduplicated by the worker), so retry is always safe.
+* **hedged probes** — with ``hedge_after_s > 0`` a duplicate probe is
+  issued when the first has not returned in time; first result wins. The
+  standard tail-latency mitigation: a straggling worker costs one hedge,
+  not a timeout.
+* **graceful shard degradation** — a band whose worker exhausts retries is
+  marked dead: subsequent probes SKIP it (no crash, no timeout-per-batch),
+  inserts to it are counted as dropped, and the service keeps answering
+  with a *widened false-negative bound*: with ``r`` rows per band and
+  ``live`` of ``b`` bands reachable, a true duplicate at Jaccard ``s`` is
+  caught with probability ``1-(1-s^r)^live`` instead of ``1-(1-s^r)^b``.
+  Telemetry (:meth:`DedupService.telemetry`, `serve/telemetry.py`-style
+  one-shot snapshot) surfaces the recall loss instead of hiding it.
+* **durable state** — :meth:`snapshot` / :meth:`DedupService.restore`
+  checkpoint the hash params, signature store, per-band shards, dead-band
+  mask and counters through ``data/durable.py``'s atomic epoch-tagged
+  format; restore re-binds params before state and redistributes bands
+  onto the *current* worker count.
+
+`run_dedup_job` closes the loop: a corpus-scale dedup job that snapshots
+every ``snapshot_every`` batches and replays from its latest atomic
+snapshot on an injected kill — driven by the same
+``train/fault.run_with_recovery`` loop the trainer uses, now spanning the
+data plane. Resumed runs are bit-identical to uninterrupted ones
+(asserted in tests), because signing is deterministic, candidate sets are
+combined before verification, and the restored state IS the state at the
+snapshot boundary.
+
+Workers here are in-process objects behind an executor (the container has
+no cluster), but the call surface is an RPC's: every access goes through
+``ShardWorker.call`` with a deadline, and the fault injector can script a
+crash/timeout/corruption at any op ordinal — the recovery paths, which are
+the point, are real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FuturesTimeout
+from concurrent.futures import wait as _wait
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data import durable
+from repro.data.dedup import (DedupConfig, MinHashDeduper, pack_band,
+                              unpack_band)
+from repro.train import fault as _fault
+from repro.train.fault import (DataCorruption, FailureInjector, ProbeTimeout,
+                               WorkerCrash)
+
+_RETRYABLE = (WorkerCrash, ProbeTimeout, ConnectionError, _FuturesTimeout)
+
+_COUNTERS = ("probes", "probe_calls", "retries", "retry_successes",
+             "hedges", "hedge_wins", "failed_probes", "skipped_probes",
+             "dropped_inserts", "snapshots", "resumes")
+
+
+class ShardWorker:
+    """One worker process's shard set: ``{band_id: {key: [doc_id, ...]}}``.
+
+    The call surface is deliberately RPC-shaped: a single :meth:`call`
+    entry point per op so deadline enforcement, fault injection and (in a
+    real deployment) serialization wrap one seam. ``injector`` scripts
+    failures by the worker's own op ordinal; ``dead`` simulates a crashed
+    process (every call refused); ``delay_s`` a straggler (each call
+    sleeps first — the hedging/timeout test knob).
+    """
+
+    def __init__(self, worker_id: int, band_ids: Sequence[int],
+                 injector: Optional[FailureInjector] = None):
+        self.worker_id = worker_id
+        self.shards: Dict[int, Dict[bytes, List[int]]] = {
+            int(b): {} for b in band_ids}
+        self.injector = injector
+        self.dead = False
+        self.delay_s = 0.0
+        self.ops = 0
+
+    def call(self, op: str, band: int, *args):
+        self.ops += 1
+        if self.injector is not None:
+            self.injector.maybe_fail(self.ops)
+        if self.dead:
+            raise WorkerCrash(f"worker {self.worker_id} is down")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        if band not in self.shards:
+            raise DataCorruption(f"band {band} not owned by worker "
+                                 f"{self.worker_id}")
+        if op == "probe":
+            return self._probe(band, *args)
+        if op == "insert":
+            return self._insert(band, *args)
+        raise ValueError(f"unknown op {op!r}")
+
+    def _probe(self, band: int, col: np.ndarray):
+        """One band's vectorized group-by (the in-process index's probe
+        unit): (D,) void keys -> [(members, hits)] with members ascending."""
+        shard_b = self.shards[band]
+        uniq, inv = np.unique(col, return_inverse=True)
+        hits = [shard_b.get(u.tobytes()) for u in uniq]
+        order = np.argsort(inv, kind="stable")
+        sorted_inv = inv[order]
+        starts = np.flatnonzero(
+            np.r_[True, sorted_inv[1:] != sorted_inv[:-1]])
+        ends = np.r_[starts[1:], len(order)]
+        return [(order[s:e], hits[sorted_inv[s]])
+                for s, e in zip(starts, ends)]
+
+    def _insert(self, band: int, keys: Sequence[bytes],
+                doc_ids: Sequence[int]) -> int:
+        """Idempotent batched insert (a retried RPC must not double-add)."""
+        shard_b = self.shards[band]
+        for kb, doc_id in zip(keys, doc_ids):
+            lst = shard_b.setdefault(kb, [])
+            if not lst or lst[-1] != doc_id:   # ids arrive in order
+                lst.append(doc_id)
+        return len(keys)
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    """Fault-tolerance envelope of a :class:`DedupService`."""
+
+    n_workers: int = 4
+    probe_timeout_s: float = 5.0
+    max_retries: int = 2
+    backoff_base_s: float = 0.005
+    backoff_cap_s: float = 0.1
+    # > 0: issue a duplicate probe when the first attempt has not returned
+    # within this many seconds; first result wins (tail-latency hedge)
+    hedge_after_s: float = 0.0
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+
+class DedupService:
+    """Corpus dedup as a durable, degradable multi-worker service.
+
+    Signing rides the deduper's streaming scan executor unchanged
+    (including its mesh/data_shards knobs); only the index plane is
+    re-homed onto workers. ``add_batch`` verdicts are bit-identical to
+    :class:`~repro.data.dedup.MinHashDeduper` while all shards are
+    reachable — asserted in tests — and degrade to documented
+    false-negative widening (never crashes, never false positives beyond
+    the estimator's own) when shards die.
+    """
+
+    def __init__(self, cfg: DedupConfig, svc: Optional[ServiceConfig] = None,
+                 mesh=None):
+        self.svc = svc or ServiceConfig()
+        self.dd = MinHashDeduper(cfg, mesh=mesh)
+        self.n_bands = cfg.lsh_bands
+        self._sigs: List[np.ndarray] = []
+        self.dead = np.zeros(self.n_bands, bool)
+        self.t = {k: 0 for k in _COUNTERS}
+        self.workers: List[ShardWorker] = []
+        self._build_workers()
+        # transport pool: sized for every band call in flight plus hedges
+        self._rpc = ThreadPoolExecutor(
+            max_workers=max(2 * self.n_bands, 2))
+
+    def _build_workers(self) -> None:
+        n = self.svc.n_workers
+        owned = [[b for b in range(self.n_bands) if b % n == w]
+                 for w in range(n)]
+        self.workers = [ShardWorker(w, bands) for w, bands in enumerate(owned)]
+
+    def owner(self, band: int) -> ShardWorker:
+        """Stateless placement: band b lives on worker b % n_workers."""
+        return self.workers[band % self.svc.n_workers]
+
+    def close(self) -> None:
+        self._rpc.shutdown(wait=False)
+        self.dd.close()
+
+    def __enter__(self) -> "DedupService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- failure envelope ---------------------------------------------------
+
+    def _attempt(self, worker: ShardWorker, op: str, band: int, *args):
+        """One bounded call, optionally hedged."""
+        self.t["probe_calls"] += 1
+        f1 = self._rpc.submit(worker.call, op, band, *args)
+        budget = self.svc.probe_timeout_s
+        if self.svc.hedge_after_s <= 0:
+            try:
+                return f1.result(timeout=budget)
+            except _FuturesTimeout:
+                f1.cancel()
+                raise ProbeTimeout(f"{op} band {band}: deadline "
+                                   f"{budget}s elapsed") from None
+        done, _ = _wait([f1], timeout=min(self.svc.hedge_after_s, budget))
+        if f1 in done:
+            return f1.result()
+        self.t["hedges"] += 1
+        self.t["probe_calls"] += 1
+        f2 = self._rpc.submit(worker.call, op, band, *args)
+        deadline = time.monotonic() + budget - self.svc.hedge_after_s
+        pending = {f1, f2}
+        first_err = None
+        while pending:
+            done, pending = _wait(pending,
+                                  timeout=max(0.0, deadline - time.monotonic()),
+                                  return_when=FIRST_COMPLETED)
+            if not done:           # overall deadline elapsed
+                break
+            for f in done:
+                if f.exception() is None:
+                    if f is f2:
+                        self.t["hedge_wins"] += 1
+                    return f.result()
+                first_err = first_err or f.exception()
+        for f in pending:
+            f.cancel()
+        if first_err is not None:
+            raise first_err
+        raise ProbeTimeout(f"{op} band {band}: deadline {budget}s elapsed "
+                           f"(hedged)")
+
+    def _with_retry(self, band: int, op: str, *args):
+        """Timeout + capped exponential backoff around :meth:`_attempt`."""
+        worker = self.owner(band)
+        delay = self.svc.backoff_base_s
+        err = None
+        for attempt in range(self.svc.max_retries + 1):
+            try:
+                out = self._attempt(worker, op, band, *args)
+                if attempt:
+                    self.t["retry_successes"] += 1
+                return out
+            except _RETRYABLE as e:
+                err = e
+                if attempt < self.svc.max_retries:
+                    self.t["retries"] += 1
+                    time.sleep(delay)
+                    delay = min(delay * 2, self.svc.backoff_cap_s)
+        raise err
+
+    def revive(self, band: Optional[int] = None) -> None:
+        """Clear the dead mark (operator action after a worker returns)."""
+        if band is None:
+            self.dead[:] = False
+        else:
+            self.dead[band] = False
+
+    # -- the probe/insert plane ---------------------------------------------
+
+    def _probe_batch(self, kb: np.ndarray):
+        """Scatter one group-by per live band, gather candidate sets.
+        A band that exhausts retries is marked dead *for subsequent
+        batches*; this batch proceeds without its candidates."""
+        D = kb.shape[0]
+        self.t["probes"] += 1
+        live = [b for b in range(self.n_bands) if not self.dead[b]]
+        self.t["skipped_probes"] += self.n_bands - len(live)
+
+        def one(b):
+            col = np.ascontiguousarray(kb[:, b])
+            try:
+                return self._with_retry(b, "probe", col)
+            except _RETRYABLE:
+                self.dead[b] = True
+                self.t["failed_probes"] += 1
+                return []
+
+        # gather fan-out: the per-band retry pipelines run concurrently
+        # (each issues its own transport calls on the rpc pool)
+        if len(live) > 1:
+            with ThreadPoolExecutor(max_workers=len(live)) as pool:
+                per_band = list(pool.map(one, live))
+        else:
+            per_band = [one(b) for b in live]
+        index_cand = [set() for _ in range(D)]
+        batch_cand = [set() for _ in range(D)]
+        for groups in per_band:
+            for members, hit in groups:
+                for pos, i in enumerate(members):
+                    if hit:
+                        index_cand[i].update(hit)
+                    if pos:
+                        batch_cand[i].update(members[:pos].tolist())
+        return index_cand, batch_cand
+
+    def _insert_bands(self, inserts: Dict[int, List]) -> None:
+        """Flush one batch's inserts, one call per band; a dead or dying
+        band drops its inserts (counted — future recall loss)."""
+        for b, pairs in inserts.items():
+            keys = [k for k, _ in pairs]
+            ids = [i for _, i in pairs]
+            if self.dead[b]:
+                self.t["dropped_inserts"] += len(pairs)
+                continue
+            try:
+                self._with_retry(b, "insert", keys, ids)
+            except _RETRYABLE:
+                self.dead[b] = True
+                self.t["dropped_inserts"] += len(pairs)
+
+    def add_batch(self, docs: Sequence[np.ndarray]) -> np.ndarray:
+        """Dedup a document batch; (D,) bool duplicate flags — the
+        service-plane twin of ``MinHashDeduper.add_batch`` (bit-identical
+        with all shards live; verify loop and first-wins order shared)."""
+        D = len(docs)
+        flags = np.zeros(D, bool)
+        if D == 0:
+            return flags
+        sigs = self.dd.signature_many(docs)
+        kb = self.dd._band_keys(sigs)
+        index_cand, batch_cand = self._probe_batch(kb)
+        inserts: Dict[int, List] = {}
+        gid: List[Optional[int]] = [None] * D
+        for i in range(D):
+            cands = set(index_cand[i])
+            cands.update(gid[j] for j in batch_cand[i] if gid[j] is not None)
+            best_j, best_id = self._best_match(sigs[i], sorted(cands))
+            if best_id is not None and best_j >= self.dd.cfg.threshold:
+                flags[i] = True
+            else:
+                doc_id = len(self._sigs)
+                self._sigs.append(sigs[i])
+                gid[i] = doc_id
+                for b in range(self.n_bands):
+                    inserts.setdefault(b, []).append(
+                        (kb[i, b].tobytes(), doc_id))
+        self._insert_bands(inserts)
+        return flags
+
+    def _best_match(self, sig, candidates):
+        if not candidates:
+            return 0.0, None
+        cand_sigs = np.stack([self._sigs[c] for c in candidates])
+        jac = (cand_sigs == sig[None, :]).mean(axis=1)
+        best = int(np.argmax(jac))
+        return float(jac[best]), candidates[best]
+
+    def __len__(self):
+        return len(self._sigs)
+
+    # -- telemetry ----------------------------------------------------------
+
+    def recall_bound(self, jaccard: Optional[float] = None) -> Dict[str, float]:
+        """LSH detection probability for a true duplicate at ``jaccard``
+        (default: the configured threshold): ``1-(1-s^r)^bands``, full vs
+        live — the widened false-negative bound degraded mode operates
+        under."""
+        s = self.dd.cfg.threshold if jaccard is None else jaccard
+        r = self.dd.rows
+        p = min(max(s, 0.0), 1.0) ** r
+        live = int(self.n_bands - self.dead.sum())
+        return {"full": 1.0 - (1.0 - p) ** self.n_bands,
+                "live": 1.0 - (1.0 - p) ** live}
+
+    def telemetry(self) -> Dict[str, float]:
+        """One-shot counter snapshot (the `serve/telemetry.py` idiom: all
+        accounting accumulates inline, the read side derives rates once)."""
+        rb = self.recall_bound()
+        out = dict(self.t)
+        out.update({
+            "n_workers": self.svc.n_workers,
+            "dead_bands": int(self.dead.sum()),
+            "live_bands": int(self.n_bands - self.dead.sum()),
+            "docs_indexed": len(self._sigs),
+            "recall_at_threshold_full": rb["full"],
+            "recall_at_threshold_live": rb["live"],
+            # the headline degradation number: how much detection
+            # probability the dead shards are costing right now
+            "recall_loss": rb["full"] - rb["live"],
+        })
+        return out
+
+    # -- durability ---------------------------------------------------------
+
+    def export_state(self) -> Dict:
+        """Params + signature store + per-band shards + dead mask +
+        counters, as one durable-state pytree. Shards are keyed by *band*,
+        not worker, so restore redistributes onto any worker count."""
+        shards = {}
+        for b in range(self.n_bands):
+            shards[f"band_{b:04d}"] = pack_band(self.owner(b).shards[b])
+        sigs = (np.stack([np.asarray(s, np.uint32) for s in self._sigs])
+                if self._sigs
+                else np.zeros((0, self.dd.cfg.n_signatures), np.uint32))
+        return {"params": self.dd.export_state()["params"],
+                "sigs": sigs,
+                "shards": shards,
+                "dead": self.dead.astype(np.uint8),
+                "counters": {k: np.int64(v) for k, v in self.t.items()}}
+
+    def import_state(self, tree: Dict) -> None:
+        """Adopt a snapshot: hash params re-bound FIRST (future signatures
+        must come from the checkpointed draw), then signatures, then the
+        band shards redistributed by ``b % n_workers`` for the *current*
+        worker count (elastic restore), then the degradation mask and
+        counters."""
+        self.dd.import_params(tree["params"])
+        sigs = np.asarray(tree["sigs"], np.uint32)
+        self._sigs = [sigs[i] for i in range(sigs.shape[0])]
+        if len(tree["shards"]) != self.n_bands:
+            raise ValueError(f"snapshot has {len(tree['shards'])} bands, "
+                             f"config expects {self.n_bands}")
+        self._build_workers()
+        for b in range(self.n_bands):
+            self.owner(b).shards[b] = unpack_band(
+                tree["shards"][f"band_{b:04d}"])
+        self.dead = np.asarray(tree["dead"], np.uint8).astype(bool).copy()
+        # counters come back from the snapshot EXCEPT resumes: that one
+        # counts restores performed by THIS process (a snapshot-resident
+        # resume count would roll back with every restore it reports)
+        resumes = self.t.get("resumes", 0) + 1
+        self.t = {k: int(tree["counters"][k]) if k in tree["counters"] else 0
+                  for k in _COUNTERS}
+        self.t["resumes"] = resumes
+
+    def snapshot(self, directory: str, epoch: int, *, keep: int = 3,
+                 async_: bool = False, extra: Optional[Dict] = None,
+                 injector=None):
+        """Write one epoch-tagged atomic snapshot (``extra`` rides along
+        under its own key — job cursors, accumulated flags)."""
+        self.t["snapshots"] += 1
+        tree = {"service": self.export_state()}
+        if extra:
+            tree["job"] = extra
+        return durable.save(tree, directory, epoch, keep=keep,
+                            async_=async_, injector=injector)
+
+    def restore(self, directory: str, epoch: Optional[int] = None):
+        """Restore from the newest (or given) snapshot; returns
+        ``(epoch, extra)`` where ``extra`` is the job payload passed to
+        :meth:`snapshot` (or {})."""
+        tree, epoch = durable.load(directory, epoch)
+        self.import_state(tree["service"])
+        return epoch, tree.get("job", {})
+
+
+def run_dedup_job(service: DedupService, docs: Sequence[np.ndarray], *,
+                  directory: str, batch_docs: int = 64,
+                  snapshot_every: int = 1,
+                  injector: Optional[FailureInjector] = None,
+                  max_restarts: int = 10, keep: int = 3) -> Dict:
+    """Corpus dedup that survives preemption: process ``docs`` in batches,
+    snapshot the full service state every ``snapshot_every`` batches, and
+    on an injected kill restore the latest atomic snapshot and replay —
+    ``train/fault.run_with_recovery`` driving the data plane. The final
+    flags (and the service's sketch state) are bit-identical to an
+    uninterrupted run: replayed batches recompute deterministically from
+    the restored boundary state.
+
+    Returns ``{"flags", "restarts", "batches"}``.
+    """
+    D = len(docs)
+    n_steps = max(1, -(-D // batch_docs))
+    flags = np.zeros(D, bool)
+
+    def one(step):
+        lo = step * batch_docs
+        sel = docs[lo:lo + batch_docs]
+        flags[lo:lo + len(sel)] = service.add_batch(sel)
+        return {"dups": int(flags[lo:lo + len(sel)].sum())}
+
+    def save_ckpt(step):
+        service.snapshot(directory, step, keep=keep,
+                         extra={"flags": flags.astype(np.uint8)},
+                         injector=injector)
+
+    def restore_ckpt():
+        epoch = durable.latest_epoch(directory)
+        if epoch is None:
+            return 0
+        epoch, job = service.restore(directory)
+        if "flags" in job:
+            flags[:] = np.asarray(job["flags"], np.uint8).astype(bool)
+        return epoch
+
+    # epoch-0 snapshot: a kill before the first periodic checkpoint must
+    # restore the *initial* state (same params!), not re-seed
+    if durable.latest_epoch(directory) is None:
+        service.snapshot(directory, 0, keep=keep,
+                         extra={"flags": flags.astype(np.uint8)})
+    res = _fault.run_with_recovery(
+        one, save_ckpt, restore_ckpt, n_steps=n_steps,
+        ckpt_every=max(1, snapshot_every), injector=injector,
+        max_restarts=max_restarts)
+    durable.flush()
+    return {"flags": flags, "restarts": res["restarts"], "batches": n_steps}

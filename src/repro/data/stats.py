@@ -167,7 +167,10 @@ class NgramStats:
             self.plan, batch, carry={"hll": state["hll"],
                                      "cms": state["cms"]},
             mesh=self.mesh, data_shards=self.cfg.data_shards)
-        return {"stream": sstate, "tokens": state["tokens"]}
+        # the true (unpadded) batch rides along so a checkpoint can slice
+        # shard padding off and restore elastically onto any device count
+        return {"stream": sstate, "tokens": state["tokens"],
+                "batch": int(batch)}
 
     def update_stream(self, sstate: Dict, tokens, lengths=None) -> Dict:
         """Fold one (B, C) token chunk into the stream (rows advance
@@ -182,7 +185,7 @@ class NgramStats:
             data_shards=self.cfg.data_shards)
         added = (int(tokens.shape[0]) * int(tokens.shape[1])
                  if lengths is None else int(np.sum(np.asarray(lengths))))
-        return {"stream": st,
+        return {**sstate, "stream": st,
                 "tokens": self._count_tokens(sstate["tokens"], added)}
 
     def update_stream_many(self, sstate: Dict, tokens, lengths=None) -> Dict:
@@ -201,7 +204,7 @@ class NgramStats:
             data_shards=self.cfg.data_shards)
         added = (int(tokens.size)
                  if lengths is None else int(np.sum(np.asarray(lengths))))
-        return {"stream": st,
+        return {**sstate, "stream": st,
                 "tokens": self._count_tokens(sstate["tokens"], added)}
 
     def finalize_stream(self, sstate: Dict) -> Dict:
@@ -210,6 +213,49 @@ class NgramStats:
         out = stream.finalize(self.plan, sstate["stream"])
         return {"hll": out["hll"], "cms": out["cms"],
                 "tokens": sstate["tokens"]}
+
+    # -- durability ---------------------------------------------------------
+
+    def export_params(self) -> Dict:
+        """The sampled draw every estimate depends on (h1/remix tables, CMS
+        row constants) as a host pytree — the ``params`` subtree of every
+        durable snapshot; :meth:`rebind_params` is its inverse."""
+        return {"fam": jax.tree_util.tree_map(np.asarray, self.fp),
+                "cms": jax.tree_util.tree_map(np.asarray, self._cms_params)}
+
+    def export_stream(self, sstate: Dict) -> Dict:
+        """Snapshot an open stream + the sampled hash params as one host
+        pytree. The params MUST persist with the state: HLL register
+        indices and CMS columns are functions of this process's h1 / remix
+        draw, so a restart that re-draws against a checkpointed table
+        silently voids every estimate bound (the restore re-binds them
+        first). Mesh-independent — restorable onto any device count."""
+        return {"params": self.export_params(),
+                "stream": stream.export_state(self.plan, sstate["stream"],
+                                              batch=sstate.get("batch")),
+                "tokens": np.asarray(sstate["tokens"])}
+
+    def rebind_params(self, params: Dict) -> None:
+        """Adopt checkpointed hash params (before importing state). The
+        jitted update/lookup closures baked the old arrays as constants,
+        so they are re-wrapped."""
+        self.fp = jax.tree_util.tree_map(jnp.asarray, params["fam"])
+        self._cms_params = jax.tree_util.tree_map(jnp.asarray, params["cms"])
+        self._update = jax.jit(self._update_impl)
+        self._lookup = jax.jit(lambda t: self.fam._lookup(self.fp, t))
+
+    def import_stream(self, tree: Dict) -> Dict:
+        """Rebuild a live stream state from :meth:`export_stream`'s tree on
+        THIS instance's mesh (elastic: the exported tree is unpadded, the
+        import re-pads for the current device count)."""
+        self.rebind_params(tree["params"])
+        sstate = stream.import_state(self.plan, tree["stream"],
+                                     mesh=self.mesh,
+                                     data_shards=self.cfg.data_shards)
+        batch = int(np.asarray(tree["stream"]["seen"]).shape[0])
+        return {"stream": sstate,
+                "tokens": jnp.asarray(tree["tokens"], jnp.uint32),
+                "batch": batch}
 
     def distinct_ngrams(self, state: Dict) -> float:
         return float(self.hll.estimate(state["hll"]))

@@ -77,6 +77,12 @@ Entry points:
   dispatch (the scan executor under the stateful API). A fixed ``T`` gives
   a single compiled shape for any stream length — the executor never
   retraces, however long the feed runs.
+* :func:`export_state` / :func:`import_state` — the durability contract:
+  snapshot a carry as a mesh-independent host pytree and rebuild it on ANY
+  device count (shard padding is sliced off / re-applied with identity
+  fill), so corpus jobs checkpoint mid-stream and resume bit-identical —
+  even elastically onto a different mesh (``data/durable.py`` is the
+  file-format layer on top).
 * :func:`feed` — drive :func:`update_many` over an unbounded host iterator
   with the next block's host->device transfer overlapped with the current
   block's compute (double buffering).
@@ -540,6 +546,86 @@ def finalize(plan: SketchPlan, state: Dict,
             o = o[:batch]
         out[name] = o
     return out
+
+
+def export_state(plan: SketchPlan, state: Dict,
+                 batch: Optional[int] = None) -> Dict:
+    """Snapshot a stream carry as a **mesh-independent** host-side pytree.
+
+    ``batch`` slices shard-padding rows off the per-row leaves (tail(s),
+    seen, "row"-kind sketch states); global sketch states pass through
+    whole. Padding rows carry only identity state (zero tails, sentinel
+    minima, zero counts), so slicing them is lossless and the exported tree
+    is the same whatever mesh the stream ran on — the property that makes
+    a checkpoint restorable onto a *different* device/worker count
+    (:func:`import_state`). All leaves are materialized to host numpy so
+    the tree is safe to hand to ``train.checkpoint`` / ``data.durable``
+    even while the live carry keeps being donated.
+    """
+    if batch is None:
+        batch = state_batch(plan, state)
+    out = {k: np.asarray(state[k][:batch])
+           for k in ("tail", "tail_b", "seen") if k in state}
+    sk = {}
+    for name, spec in plan.sketches:
+        a = state["sketch"][name]
+        sk[name] = np.asarray(a[:batch] if spec.state_kind == "row" else a)
+    out["sketch"] = sk
+    return out
+
+
+def import_state(plan: SketchPlan, tree: Dict, *, mesh=None,
+                 data_shards: Optional[int] = None) -> Dict:
+    """Rebuild a live stream carry from :func:`export_state`'s tree,
+    re-padded for the *target* mesh — the elastic-restore half of the
+    contract: a stream checkpointed at one device count resumes on any
+    other, bit-identical, because padding rows are (re)filled with each
+    sketch's identity and never submit symbols.
+    """
+    if not isinstance(plan, SketchPlan):
+        raise TypeError(f"plan must be a SketchPlan, got {type(plan)}")
+    mesh = _resolve_mesh(mesh, data_shards)
+    n = plan.hash.n
+    seen = np.asarray(tree["seen"])
+    batch = int(seen.shape[0])
+    Bp = batch if mesh is None else batch + (-batch % mesh.devices.size)
+    pad = Bp - batch
+
+    def rowpad(a, fill, dtype):
+        a = jnp.asarray(a, dtype)
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.full((pad,) + a.shape[1:], fill, dtype)], axis=0)
+        return a
+
+    tail = np.asarray(tree["tail"])
+    if tail.shape != (batch, n - 1):
+        raise ValueError(f"tail shape {tail.shape} != ({batch}, {n - 1}) — "
+                         f"was this state exported under a different plan?")
+    state = {"tail": rowpad(tail, 0, jnp.uint32),
+             "seen": rowpad(seen, 0, jnp.int32)}
+    if plan.needs_second_stream:
+        if "tail_b" not in tree:
+            raise ValueError("plan contains a BloomSpec but the exported "
+                             "state has no tail_b — family mismatch")
+        state["tail_b"] = rowpad(np.asarray(tree["tail_b"]), 0, jnp.uint32)
+    elif "tail_b" in tree:
+        raise ValueError("exported state has tail_b but the plan has no "
+                         "BloomSpec — family mismatch")
+    missing = set(plan.names) - set(tree["sketch"])
+    if missing:
+        raise ValueError(f"exported state lacks sketches {sorted(missing)}")
+    sketch = {}
+    for name, spec in plan.sketches:
+        shape, dtype, fill = spec.state_struct(batch)
+        got = np.asarray(tree["sketch"][name])
+        if got.shape != shape:
+            raise ValueError(f"sketch {name!r} state shape {got.shape} != "
+                             f"{shape}")
+        sketch[name] = (rowpad(got, fill, dtype)
+                        if spec.state_kind == "row" else jnp.asarray(got, dtype))
+    state["sketch"] = sketch
+    return state
 
 
 def run_stream(plan: SketchPlan, h1v, *, chunk_s: int, h1v_b=None,

@@ -407,6 +407,51 @@ class SessionPool:
         self._t += 1
         return token
 
+    # -- durability --------------------------------------------------------
+
+    def export_state(self) -> Dict:
+        """Snapshot the pool: the (C, ...) carry pytree PLUS the hash draw
+        it was accumulated under (h1 table, canary filter) and the host-side
+        slot allocator/clock. The no-repeat Bloom rows and n-gram ring
+        tails are functions of this process's h1 draw — restoring them
+        under a re-drawn table would silently corrupt every subsequent
+        membership probe — so params travel with state (the durable-state
+        contract; see ``data/durable.py``)."""
+        params = {"h1": np.asarray(self.h1)}
+        if self.canary_bits is not None:
+            params["canary_bits"] = np.asarray(self.canary_bits)
+        return {"params": params,
+                "carry": jax.tree_util.tree_map(np.asarray, self.state),
+                "free": np.asarray(self._free, np.int64),
+                "t": np.int64(self._t)}
+
+    def import_state(self, tree: Dict) -> None:
+        """Adopt a snapshot (params first, then the carry accumulated under
+        them). Elastic across meshes: the exported carry is unpadded host
+        rows; the capacity (and spec) of THIS pool must match, the device
+        layout need not — h1/canary ride the step calls as arguments, so no
+        re-trace is needed."""
+        params = tree["params"]
+        h1 = jnp.asarray(params["h1"], _U32)
+        if int(h1.shape[0]) != self.vocab:
+            raise ValueError(f"snapshot h1 has vocab {h1.shape[0]}, pool "
+                             f"expects {self.vocab}")
+        self.h1 = h1
+        if self.spec.has_canary:
+            if "canary_bits" not in params:
+                raise ValueError("spec has a canary filter but the snapshot "
+                                 "carries no canary_bits")
+            self.canary_bits = jnp.asarray(params["canary_bits"], _U32)
+        carry = jax.tree_util.tree_map(jnp.asarray, tree["carry"])
+        if int(carry["active"].shape[0]) != self.capacity:
+            raise ValueError(
+                f"snapshot capacity {carry['active'].shape[0]} != pool "
+                f"capacity {self.capacity} (session slots are identity, "
+                f"not layout — restore into an equal-capacity pool)")
+        self.state = carry
+        self._free = [int(s) for s in np.asarray(tree["free"], np.int64)]
+        self._t = int(tree["t"])
+
     # -- introspection ----------------------------------------------------
     @property
     def active_slots(self) -> np.ndarray:

@@ -5,9 +5,15 @@ shapes, dtypes, step) and one `.npy` per leaf (path-derived filename).
 Properties needed at 1000+ nodes:
 
 * **atomic** — written to `<dir>.tmp`, fsync'd, then renamed; a crash never
-  leaves a half checkpoint that restore would pick up;
+  leaves a half checkpoint that restore would pick up. A stale `.tmp` left
+  by a mid-write kill is invisible to `latest_step`/`restore` (suffix
+  filter + meta.json integrity check) and is reclaimed by the next write
+  (`_write` clears a pre-existing tmp of its own step; `_rotate` sweeps the
+  rest under the save lock, where any other `.tmp` is by construction dead);
 * **async** — `save_async` snapshots device arrays to host then hands the
-  file I/O to a daemon thread; training continues immediately;
+  file I/O to a daemon thread; training continues immediately. In-flight
+  writers are registered so :func:`flush` can join them — a clean shutdown
+  (or a pre-snapshot fault barrier) never drops the newest snapshot;
 * **elastic restore** — arrays are stored unsharded (per-host shards of the
   addressable portion; single-process here = full arrays), so restore can
   `device_put` onto ANY mesh shape: restarting 2 pods -> 1 pod or growing
@@ -27,6 +33,11 @@ import jax
 import numpy as np
 
 _SAVE_LOCK = threading.Lock()
+# async writers not yet joined; flush() drains it so shutdown (or a caller
+# that must observe its snapshot on disk, e.g. the durable data-plane's
+# pre-kill barrier) cannot race the daemon thread
+_INFLIGHT: list = []
+_INFLIGHT_LOCK = threading.Lock()
 
 
 def _leaf_name(path) -> str:
@@ -34,26 +45,59 @@ def _leaf_name(path) -> str:
     return re.sub(r"[^A-Za-z0-9_.]+", "_", s).strip("_") or "leaf"
 
 
-def save(state, directory: str, step: int, keep: int = 3) -> str:
-    """Synchronous checkpoint write. Returns the checkpoint path."""
+def save(state, directory: str, step: int, keep: int = 3,
+         pre_rename=None) -> str:
+    """Synchronous checkpoint write. Returns the checkpoint path.
+
+    ``pre_rename(tmp, final)`` is an optional hook invoked after the tmp
+    directory is fully written/fsync'd but *before* the atomic rename — the
+    fault-injection seam the durability tests use to simulate a process
+    killed mid-snapshot (the write is lost, the tmp is stale, and restore
+    must fall back to the previous checkpoint)."""
     host_state = jax.tree_util.tree_map(np.asarray, state)
-    return _write(host_state, directory, step, keep)
+    return _write(host_state, directory, step, keep, pre_rename)
 
 
-def save_async(state, directory: str, step: int, keep: int = 3) -> threading.Thread:
-    """Snapshot to host memory now; write in a background thread."""
+def save_async(state, directory: str, step: int, keep: int = 3,
+               pre_rename=None) -> threading.Thread:
+    """Snapshot to host memory now; write in a background thread.
+
+    The writer thread is registered until joined: call :func:`flush` (or
+    join the returned thread) before process exit, otherwise a daemon
+    thread killed mid-write drops the newest snapshot."""
     host_state = jax.tree_util.tree_map(np.asarray, state)  # blocks on transfer
-    t = threading.Thread(target=_write, args=(host_state, directory, step, keep),
+    t = threading.Thread(target=_write, args=(host_state, directory, step, keep,
+                                              pre_rename),
                          daemon=True)
+    with _INFLIGHT_LOCK:
+        _INFLIGHT.append(t)
     t.start()
     return t
 
 
-def _write(host_state, directory: str, step: int, keep: int) -> str:
+def flush() -> None:
+    """Join every in-flight :func:`save_async` writer. After it returns,
+    all previously requested snapshots are durably on disk (or their
+    exceptions swallowed into the writer thread) — the shutdown barrier."""
+    while True:
+        with _INFLIGHT_LOCK:
+            if not _INFLIGHT:
+                return
+            t = _INFLIGHT.pop()
+        t.join()
+
+
+def _write(host_state, directory: str, step: int, keep: int,
+           pre_rename=None) -> str:
     with _SAVE_LOCK:
         final = os.path.join(directory, f"step_{step:08d}")
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        # a stale tmp from a previous mid-write crash of this same step must
+        # not leak its leaves into the fresh snapshot (meta.json would not
+        # reference them, but exist_ok=True would silently keep them)
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         leaves = jax.tree_util.tree_flatten_with_path(host_state)[0]
         meta = {"step": step, "leaves": []}
         names = set()
@@ -69,6 +113,8 @@ def _write(host_state, directory: str, step: int, keep: int) -> str:
             json.dump(meta, f)
             f.flush()
             os.fsync(f.fileno())
+        if pre_rename is not None:
+            pre_rename(tmp, final)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -81,6 +127,23 @@ def _rotate(directory: str, keep: int) -> None:
                    if d.startswith("step_") and not d.endswith(".tmp"))
     for old in ckpts[:-keep]:
         shutil.rmtree(os.path.join(directory, old))
+    # any .tmp visible here is a dead half-write: writes are serialized by
+    # _SAVE_LOCK (held now) and a live writer renames before releasing it
+    for stale in os.listdir(directory):
+        if stale.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, stale), ignore_errors=True)
+
+
+def _readable_meta(directory: str, d: str) -> bool:
+    """True iff the checkpoint dir's meta.json exists and parses — a
+    truncated meta (torn write outside the atomic protocol, disk
+    corruption) must not be offered to restore as the latest step."""
+    try:
+        with open(os.path.join(directory, d, "meta.json")) as f:
+            json.load(f)
+        return True
+    except (OSError, ValueError):
+        return False
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -88,7 +151,7 @@ def latest_step(directory: str) -> Optional[int]:
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(directory)
              if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(directory, d, "meta.json"))]
+             and _readable_meta(directory, d)]
     return max(steps) if steps else None
 
 

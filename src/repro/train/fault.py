@@ -15,27 +15,71 @@ At 1000+ nodes the relevant failure classes and their mitigations here:
 
 `FailureInjector` raises scripted exceptions at chosen steps so the recovery
 path is exercised by tests and the example driver.
+
+The same machinery covers the **data plane** (PR 8): the dedup/decontam
+service and the durable snapshot layer take injectors at their own step
+granularity (probe ordinal, chunk index, snapshot epoch), and the typed
+subclasses below let a test script *which* failure class fires — a worker
+process crash, an RPC deadline blown, a process killed mid-checkpoint-write,
+or corrupted payload bytes — and assert the matching recovery path ran
+(retry/backoff for transport errors, shard degradation for dead workers,
+stale-tmp fallback for interrupted snapshots).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Mapping, Optional
 
 
 class InjectedFailure(RuntimeError):
-    pass
+    """Base class of every scripted fault (recovery loops catch this)."""
+
+
+class WorkerCrash(InjectedFailure):
+    """A shard worker died / refused the connection: the call never ran."""
+
+
+class ProbeTimeout(InjectedFailure):
+    """An RPC deadline elapsed: the call may or may not have run (probes
+    are read-only and inserts idempotent, so retry is always safe)."""
+
+
+class SnapshotInterrupt(InjectedFailure):
+    """The process was killed mid-checkpoint-write: the tmp dir is stale,
+    the previous atomic snapshot must win."""
+
+
+class DataCorruption(InjectedFailure):
+    """A payload failed validation (torn read, bit flip): not retryable
+    against the same bytes — the caller must re-derive or restore."""
 
 
 @dataclasses.dataclass
 class FailureInjector:
+    """Raise scripted exceptions once per step.
+
+    ``fail_at_steps`` raises the generic :class:`InjectedFailure`;
+    ``fail_kinds`` maps a step to the exception *class* to raise there, so
+    tests can distinguish crash vs timeout vs corruption recovery. A step
+    named by both uses its ``fail_kinds`` entry. The fail-once-per-step
+    semantics are shared: after a step has fired it never fires again, so
+    the replayed step makes progress.
+    """
+
     fail_at_steps: Iterable[int] = ()
+    fail_kinds: Mapping[int, type] = dataclasses.field(default_factory=dict)
     seen: set = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at_steps and step not in self.seen:
+        if step in self.seen:
+            return
+        kind = self.fail_kinds.get(step)
+        if kind is None and step in self.fail_at_steps:
+            kind = InjectedFailure
+        if kind is not None:
             self.seen.add(step)   # fail once per step, then allow progress
-            raise InjectedFailure(f"injected failure at step {step}")
+            raise kind(f"injected {kind.__name__} at step {step}")
 
 
 class Watchdog:

@@ -21,6 +21,12 @@
 #   row-wise sharding parity and the engine integration
 #   (tests/test_serve*.py).
 #
+# --fault — the durability / fault-tolerance suite: crash/resume bit-parity
+#   for durable snapshots of the data plane (tests/test_durable.py), the
+#   DedupService retry/hedge/degrade/elastic envelope
+#   (tests/test_service.py), and the train-side checkpoint/injector/recovery
+#   tests (tests/test_train.py).
+#
 # --bench — the device-bench profile (per the olmax/HomebrewNLP exemplar
 #   harnesses): tcmalloc LD_PRELOAD when present (glibc malloc fragments
 #   under jax's large short-lived host buffers), allocator/report and
@@ -50,6 +56,11 @@ if [[ "${1:-}" == "--serve" ]]; then
   shift
   exec python -m pytest -x -q tests/test_serve.py tests/test_serve_plane.py \
     "$@"
+fi
+if [[ "${1:-}" == "--fault" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_durable.py tests/test_service.py \
+    tests/test_train.py "$@"
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift

@@ -1,0 +1,405 @@
+"""Durable data-plane state: crash/resume bit-parity (``./test.sh --fault``).
+
+The invariant under test everywhere: a job killed mid-stream (injected, at
+chunk boundaries and mid-snapshot-write) and resumed from its latest atomic
+snapshot produces **bit-identical** sketch state (MinHash / HLL / Bloom /
+CMS) and dedup verdicts to the uninterrupted run — across both fused
+families, across 1/2/4/8 virtual devices, and restored onto a *different*
+device count than the one that wrote the snapshot. Every resume-side
+instance is constructed with a DIFFERENT seed, so parity also proves the
+restore re-binds the checkpointed hash draw (params-before-state) instead
+of silently re-drawing — the failure mode that voids the paper's bounds.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import durable
+from repro.data.decontam import DecontamConfig, Decontaminator
+from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.data.stats import NgramStats, StatsConfig
+from repro.train.fault import (FailureInjector, InjectedFailure,
+                               SnapshotInterrupt, WorkerCrash)
+
+N_DEV = len(jax.devices())
+
+
+def _shards(*counts):
+    return [pytest.param(d, marks=pytest.mark.skipif(
+        d > N_DEV, reason=f"needs {d} devices")) for d in counts]
+
+
+def _assert_tree_equal(got, want, path="tree"):
+    if isinstance(want, dict):
+        assert isinstance(got, dict) and set(got) == set(want), path
+        for k in want:
+            _assert_tree_equal(got[k], want[k], f"{path}[{k!r}]")
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=path)
+
+
+# ---------------------------------------------------------------------------
+# the file layer
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"h1": rng.integers(0, 2**32, 64, dtype=np.uint32),
+                       "a": rng.standard_normal(5).astype(np.float32)},
+            "state": {"cms": rng.integers(0, 100, (3, 8)).astype(np.int64),
+                      "tokens": np.uint32(seed)},
+            "flags": rng.integers(0, 2, 10).astype(np.uint8)}
+
+
+def test_durable_roundtrip(tmp_path):
+    d = str(tmp_path)
+    durable.save(_tree(1), d, 3)
+    got, epoch = durable.load(d)
+    assert epoch == 3
+    _assert_tree_equal(got, _tree(1))
+    # dtypes survive exactly (bit-parity is a dtype question too)
+    assert got["params"]["h1"].dtype == np.uint32
+    assert got["state"]["tokens"].dtype == np.uint32
+
+
+def test_durable_epoch_selection_and_rotation(tmp_path):
+    d = str(tmp_path)
+    for e in (1, 2, 3, 4):
+        durable.save(_tree(e), d, e, keep=2)
+    assert durable.latest_epoch(d) == 4
+    assert sorted(os.listdir(d)) == ["step_00000003", "step_00000004"]
+    got, epoch = durable.load(d, 3)
+    assert epoch == 3
+    _assert_tree_equal(got, _tree(3))
+
+
+def test_durable_rejects_non_durable_trees(tmp_path):
+    d = str(tmp_path)
+    with pytest.raises(ValueError, match="strings"):
+        durable.save({1: np.zeros(2)}, d, 0)
+    with pytest.raises(ValueError, match="strings"):
+        durable.save({"a'b": np.zeros(2)}, d, 0)
+    with pytest.raises(ValueError, match="array-like"):
+        durable.save({"a": {"b": object()}}, d, 0)
+
+
+def test_latest_epoch_ignores_stale_tmp_and_torn_meta(tmp_path):
+    d = str(tmp_path)
+    durable.save(_tree(1), d, 1)
+    # a mid-write crash leaves a half-written tmp dir at a HIGHER epoch...
+    os.makedirs(tmp_path / "step_00000099.tmp")
+    # ...and a torn meta (rename happened, write didn't fsync) at another
+    os.makedirs(tmp_path / "step_00000050")
+    (tmp_path / "step_00000050" / "meta.json").write_text('{"truncat')
+    assert durable.latest_epoch(d) == 1
+    got, epoch = durable.load(d)
+    assert epoch == 1
+    _assert_tree_equal(got, _tree(1))
+
+
+def test_mid_snapshot_kill_falls_back_then_retry_wins(tmp_path):
+    d = str(tmp_path)
+    inj = FailureInjector(fail_kinds={2: SnapshotInterrupt})
+    durable.save(_tree(1), d, 1, injector=inj)
+    # epoch 2's write is killed after the tmp write, before the rename
+    with pytest.raises(SnapshotInterrupt):
+        durable.save(_tree(2), d, 2, injector=inj)
+    assert any(x.endswith(".tmp") for x in os.listdir(d))
+    assert durable.latest_epoch(d) == 1          # previous snapshot wins
+    _assert_tree_equal(durable.load(d)[0], _tree(1))
+    # the replayed save (fail-once semantics) completes and sweeps the tmp
+    durable.save(_tree(2), d, 2, injector=inj)
+    assert durable.latest_epoch(d) == 2
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+    _assert_tree_equal(durable.load(d)[0], _tree(2))
+
+
+def test_async_save_flush_barrier(tmp_path):
+    d = str(tmp_path)
+    for e in (1, 2):
+        durable.save(_tree(e), d, e, async_=True)
+    durable.flush()
+    assert durable.latest_epoch(d) == 2
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+    _assert_tree_equal(durable.load(d)[0], _tree(2))
+
+
+# ---------------------------------------------------------------------------
+# stream crash/resume bit-parity: both families x 1/2/4/8 vdevs
+# ---------------------------------------------------------------------------
+
+def _chunks(B, n_chunks, C, seed=0, vocab=4096):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(n_chunks, B, C)).astype(np.uint32)
+
+
+@pytest.mark.parametrize("d", _shards(1, 2, 4, 8))
+@pytest.mark.parametrize("family", ["cyclic", "general"])
+def test_stats_stream_resume_bit_identical(tmp_path, family, d):
+    """Kill a stats stream at a chunk boundary, restore into a FRESH
+    process (different seed — re-drawn params), replay the tail: final
+    HLL registers, CMS table and token counter are bit-identical."""
+    cfg = StatsConfig(vocab=4096, family=family, data_shards=d)
+    toks = _chunks(3, 4, 64, seed=d)            # B=3 never divides d > 1
+    st = NgramStats(cfg)
+    ss = st.init_stream(3)
+    for c in toks:
+        ss = st.update_stream(ss, c)
+    want = st.finalize_stream(ss)
+
+    st1 = NgramStats(cfg)
+    ss1 = st1.init_stream(3)
+    for c in toks[:2]:
+        ss1 = st1.update_stream(ss1, c)
+    durable.save_stats_stream(st1, ss1, str(tmp_path), epoch=2)
+    # "crash": the resumed process samples a different draw — restore must
+    # override it with the checkpointed params or parity is impossible
+    st2 = NgramStats(dataclasses.replace(cfg, seed=cfg.seed + 99))
+    ss2, epoch = durable.restore_stats_stream(st2, str(tmp_path))
+    assert epoch == 2
+    for c in toks[2:]:
+        ss2 = st2.update_stream(ss2, c)
+    got = st2.finalize_stream(ss2)
+    for k in ("hll", "cms", "tokens"):
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("d_save,d_load", [
+    pytest.param(1, 4, marks=pytest.mark.skipif(N_DEV < 4, reason="4 dev")),
+    pytest.param(4, 1, marks=pytest.mark.skipif(N_DEV < 4, reason="4 dev")),
+    pytest.param(2, 8, marks=pytest.mark.skipif(N_DEV < 8, reason="8 dev")),
+])
+def test_stats_stream_elastic_restore_across_device_counts(tmp_path, d_save,
+                                                           d_load):
+    """The exported stream is mesh-independent: a snapshot written at one
+    device count restores bit-identically onto another (shard padding is
+    sliced off at export and re-applied, with identity fills, at import)."""
+    toks = _chunks(5, 4, 64, seed=7)
+    base = NgramStats(StatsConfig(vocab=4096, data_shards=1))
+    ss = base.init_stream(5)
+    for c in toks:
+        ss = base.update_stream(ss, c)
+    want = base.finalize_stream(ss)
+
+    st1 = NgramStats(StatsConfig(vocab=4096, data_shards=d_save))
+    ss1 = st1.init_stream(5)
+    for c in toks[:2]:
+        ss1 = st1.update_stream(ss1, c)
+    durable.save_stats_stream(st1, ss1, str(tmp_path), epoch=2)
+    st2 = NgramStats(StatsConfig(vocab=4096, seed=123, data_shards=d_load))
+    ss2, _ = durable.restore_stats_stream(st2, str(tmp_path))
+    for c in toks[2:]:
+        ss2 = st2.update_stream(ss2, c)
+    got = st2.finalize_stream(ss2)
+    for k in ("hll", "cms", "tokens"):
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("d", _shards(1, 2))
+def test_decontam_stream_resume_bit_identical(tmp_path, d):
+    """Same contract for the Bloom leg: the restored scan carries the
+    checkpointed eval-set filter AND both family draws, so resumed hit
+    fractions (and flags) are bit-identical."""
+    rng = np.random.default_rng(3)
+    evalset = rng.integers(0, 4096, size=(4, 160)).astype(np.uint32)
+    batch = rng.integers(0, 4096, size=(5, 128)).astype(np.uint32)
+    batch[0, :] = evalset[0, :128]            # fully contaminated row
+    batch[1, 40:] = evalset[1, : 128 - 40]    # partially contaminated row
+
+    cfg = DecontamConfig(vocab=4096, log2_m=14, data_shards=d)
+    dc = Decontaminator(cfg)
+    dc.add_eval_set(evalset)
+    ss = dc.init_stream(5)
+    for c in range(0, 128, 32):
+        ss = dc.update_stream(ss, batch[:, c:c + 32])
+    want = dc.finalize_stream(ss)
+
+    dc1 = Decontaminator(cfg)
+    dc1.add_eval_set(evalset)
+    ss1 = dc1.init_stream(5)
+    for c in range(0, 64, 32):
+        ss1 = dc1.update_stream(ss1, batch[:, c:c + 32])
+    durable.save_decontam_stream(dc1, ss1, str(tmp_path), epoch=2)
+    # resumed process: different seed, and NO eval set added — the filter
+    # must come back from the snapshot
+    dc2 = Decontaminator(dataclasses.replace(cfg, seed=cfg.seed + 99))
+    ss2, _ = durable.restore_decontam_stream(dc2, str(tmp_path))
+    for c in range(64, 128, 32):
+        ss2 = dc2.update_stream(ss2, batch[:, c:c + 32])
+    got = dc2.finalize_stream(ss2)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] > cfg.max_hit_frac          # the planted contamination
+    np.testing.assert_array_equal(got > cfg.max_hit_frac,
+                                  want > cfg.max_hit_frac)
+
+
+def test_deduper_resume_bit_identical(tmp_path):
+    """Kill a dedup job between batches; the restored deduper (different
+    seed, different device count) produces bit-identical verdicts AND
+    bit-identical exported state to the uninterrupted run."""
+    rng = np.random.default_rng(5)
+    docs = [rng.integers(0, 4096, size=int(n)).astype(np.int32)
+            for n in rng.integers(30, 300, size=40)]
+    for i in (7, 19, 33):
+        docs[i] = docs[i - 5].copy()           # exact dups across batches
+    cfg = DedupConfig(vocab=4096, n_signatures=32, lsh_bands=8,
+                      threshold=0.6)
+    with MinHashDeduper(cfg) as ref:
+        want1 = ref.add_batch(docs[:20])
+        want2 = ref.add_batch(docs[20:])
+        want_state = ref.export_state()
+
+    with MinHashDeduper(cfg) as dd1:
+        got1 = dd1.add_batch(docs[:20])
+        durable.save_deduper(dd1, str(tmp_path), epoch=1)
+    d2 = 2 if N_DEV >= 2 else None
+    with MinHashDeduper(dataclasses.replace(cfg, seed=cfg.seed + 99,
+                                            data_shards=d2)) as dd2:
+        epoch = durable.restore_deduper(dd2, str(tmp_path))
+        assert epoch == 1
+        got2 = dd2.add_batch(docs[20:])
+        got_state = dd2.export_state()
+    np.testing.assert_array_equal(got1, want1)
+    np.testing.assert_array_equal(got2, want2)
+    _assert_tree_equal(got_state, want_state)
+
+
+# ---------------------------------------------------------------------------
+# job-level recovery: run_dedup_job killed mid-stream and mid-snapshot
+# ---------------------------------------------------------------------------
+
+def _job_docs(n=60, seed=11):
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(0, 4096, size=int(m)).astype(np.int32)
+            for m in rng.integers(30, 200, size=n)]
+    for i in range(4, n, 9):
+        docs[i] = docs[i - 3].copy()
+    return docs
+
+
+def _job_cfg():
+    return DedupConfig(vocab=4096, n_signatures=32, lsh_bands=8,
+                       threshold=0.6)
+
+
+def test_dedup_job_resume_bit_identical(tmp_path):
+    """The acceptance scenario: a corpus dedup job killed by the injector
+    mid-stream (twice) AND mid-snapshot-write resumes from its latest
+    atomic snapshot and ends bit-identical to the uninterrupted run —
+    verdicts, hash params, signature store and band shards alike."""
+    from repro.data.service import DedupService, run_dedup_job
+    docs = _job_docs()
+    with DedupService(_job_cfg()) as ref:
+        want = run_dedup_job(ref, docs, directory=str(tmp_path / "ref"),
+                             batch_docs=10, snapshot_every=2)
+        want_state = ref.export_state()
+    assert want["restarts"] == 0
+
+    # steps 1 and 3 die at the loop level (worker crash / generic kill);
+    # step 4 is a snapshot boundary, so its scripted fault fires INSIDE
+    # durable.save — after the tmp write, before the atomic rename
+    inj = FailureInjector(fail_at_steps=(1,),
+                          fail_kinds={3: WorkerCrash, 4: SnapshotInterrupt})
+    with DedupService(_job_cfg()) as svc:
+        got = run_dedup_job(svc, docs, directory=str(tmp_path / "job"),
+                            batch_docs=10, snapshot_every=2, injector=inj)
+        got_state = svc.export_state()
+    assert got["restarts"] == 3
+    np.testing.assert_array_equal(got["flags"], want["flags"])
+    for k in ("params", "sigs", "shards", "dead"):
+        _assert_tree_equal(got_state[k], want_state[k], path=k)
+    # 3 failure-driven restores + the initial epoch-0 restore at job start
+    assert svc.telemetry()["resumes"] == 4
+
+
+def test_dedup_job_process_death_elastic_resume(tmp_path):
+    """Hard process death (restart budget exhausted) + elastic resume: a
+    NEW service with a DIFFERENT worker count and different seed picks up
+    the same snapshot directory and completes bit-identically."""
+    from repro.data.service import (DedupService, ServiceConfig,
+                                    run_dedup_job)
+    docs = _job_docs(n=40, seed=13)
+    with DedupService(_job_cfg()) as ref:
+        want = run_dedup_job(ref, docs, directory=str(tmp_path / "ref"),
+                             batch_docs=8, snapshot_every=1)
+
+    inj = FailureInjector(fail_at_steps=(3,))
+    with DedupService(_job_cfg(), ServiceConfig(n_workers=4)) as svc1:
+        with pytest.raises(InjectedFailure):
+            run_dedup_job(svc1, docs, directory=str(tmp_path / "job"),
+                          batch_docs=8, snapshot_every=1, injector=inj,
+                          max_restarts=0)
+    cfg2 = dataclasses.replace(_job_cfg(), seed=99)
+    with DedupService(cfg2, ServiceConfig(n_workers=2)) as svc2:
+        got = run_dedup_job(svc2, docs, directory=str(tmp_path / "job"),
+                            batch_docs=8, snapshot_every=1)
+        assert svc2.telemetry()["resumes"] >= 1
+    np.testing.assert_array_equal(got["flags"], want["flags"])
+
+
+# ---------------------------------------------------------------------------
+# the other sketch-bearing pytrees: DataPlane stats, SessionPool carry
+# ---------------------------------------------------------------------------
+
+def test_dataplane_snapshot_restore(tmp_path):
+    from repro.data.pipeline import DataPlane, PipelineConfig
+    cfg = PipelineConfig(seq_len=128, batch_size=4, vocab=4096, dedup=False)
+    ref = DataPlane(cfg)
+    for step in range(6):
+        ref.next_batch(step)
+    want = ref.telemetry()
+
+    dp1 = DataPlane(cfg)
+    for step in range(3):
+        dp1.next_batch(step)
+    dp1.snapshot(str(tmp_path), 3)
+    dp2 = DataPlane(cfg, stats=NgramStats(StatsConfig(seed=404)))
+    step = dp2.restore(str(tmp_path))
+    assert step == 3
+    for s in range(step, 6):
+        dp2.next_batch(s)
+    got = dp2.telemetry()
+    assert got == want
+    _assert_tree_equal(
+        {k: np.asarray(v) for k, v in dp2.stats_state.items()},
+        {k: np.asarray(v) for k, v in ref.stats_state.items()})
+
+
+def test_session_pool_snapshot_restore(tmp_path):
+    """The decode-plane carry survives too: no-repeat Bloom rows, prefix
+    recursion, slot allocator and clock all restore bit-identically (the
+    snapshot carries the h1 draw the Bloom rows were keyed under)."""
+    from repro.kernels.plan import DecodeSpec
+    from repro.serve import sessions as sess
+    spec = DecodeSpec(n=4, L=32, log2_m=8, k=2)
+    V, C = 257, 4
+    rng = np.random.default_rng(21)
+    h1 = rng.integers(0, 2**32, size=V, dtype=np.uint32)
+    streams = rng.integers(0, V, size=(C, 24), dtype=np.int32)
+
+    ref = sess.SessionPool(spec, C, h1)
+    ref.admit(C)
+    ref.prime(streams)
+
+    pool1 = sess.SessionPool(spec, C, h1)
+    pool1.admit(C)
+    pool1.prime(streams[:, :12])
+    durable.save({"pool": pool1.export_state()}, str(tmp_path), 1)
+    # resumed process: a different (wrong) h1 draw, overridden by restore
+    pool2 = sess.SessionPool(
+        spec, C, rng.integers(0, 2**32, size=V, dtype=np.uint32))
+    tree, _ = durable.load(str(tmp_path))
+    pool2.import_state(tree["pool"])
+    pool2.prime(streams[:, 12:])
+    _assert_tree_equal(
+        {k: np.asarray(v) for k, v in pool2.state.items()},
+        {k: np.asarray(v) for k, v in ref.state.items()})
+    assert pool2.free_count == ref.free_count
+    assert pool2._t == ref._t
+    np.testing.assert_array_equal(np.asarray(pool2.h1), np.asarray(ref.h1))

@@ -1,0 +1,297 @@
+"""DedupService fault envelope: retry, hedging, degradation, elasticity
+(``./test.sh --fault``).
+
+Layer map: `ShardWorker` op semantics -> the retry/hedge transport ->
+degraded mode (dead shards skip, recall bound widens, telemetry reports)
+-> elastic snapshot/restore across worker counts. The reference oracle
+throughout is the in-process `MinHashDeduper`: with every shard live the
+service must be bit-identical to it, batch by batch.
+"""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.data.dedup import DedupConfig, MinHashDeduper
+from repro.data.service import (DedupService, ServiceConfig, ShardWorker,
+                                run_dedup_job)
+from repro.train.fault import (DataCorruption, FailureInjector, ProbeTimeout,
+                               WorkerCrash)
+
+
+def _cfg(**kw):
+    base = dict(vocab=4096, n_signatures=32, lsh_bands=8, threshold=0.6)
+    base.update(kw)
+    return DedupConfig(**base)
+
+
+def _docs(n=48, seed=3, dup_every=7):
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(0, 4096, size=int(m)).astype(np.int32)
+            for m in rng.integers(30, 300, size=n)]
+    for i in range(dup_every, n, dup_every):
+        docs[i] = docs[i - 2].copy()
+    return docs
+
+
+# ---------------------------------------------------------------------------
+# workers
+# ---------------------------------------------------------------------------
+
+def test_worker_insert_is_idempotent():
+    w = ShardWorker(0, [0])
+    w.call("insert", 0, [b"k1", b"k2"], [5, 6])
+    w.call("insert", 0, [b"k1", b"k2"], [5, 6])   # the retried RPC
+    assert w.shards[0][b"k1"] == [5]
+    assert w.shards[0][b"k2"] == [6]
+
+
+def test_worker_rejects_unowned_band():
+    w = ShardWorker(0, [0, 4])
+    with pytest.raises(DataCorruption):
+        w.call("probe", 1, np.zeros(2, np.uint32))
+
+
+def test_worker_scripted_failures_fire_once():
+    inj = FailureInjector(fail_kinds={1: WorkerCrash, 2: ProbeTimeout})
+    w = ShardWorker(0, [0], injector=inj)
+    with pytest.raises(WorkerCrash):
+        w.call("insert", 0, [b"k"], [1])
+    with pytest.raises(ProbeTimeout):
+        w.call("insert", 0, [b"k"], [1])
+    w.call("insert", 0, [b"k"], [1])              # third op: no script left
+    assert w.shards[0][b"k"] == [1]
+
+
+# ---------------------------------------------------------------------------
+# parity with the library deduper (all shards live)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_workers", [1, 3, 8])
+def test_service_bit_identical_to_library(n_workers):
+    docs = _docs()
+    with MinHashDeduper(_cfg()) as ref, \
+         DedupService(_cfg(), ServiceConfig(n_workers=n_workers)) as svc:
+        for lo in range(0, len(docs), 16):
+            want = ref.add_batch(docs[lo:lo + 16])
+            got = svc.add_batch(docs[lo:lo + 16])
+            np.testing.assert_array_equal(got, want, err_msg=f"batch {lo}")
+        t = svc.telemetry()
+    assert t["probes"] == 3
+    assert t["docs_indexed"] == len(ref)
+    assert t["dead_bands"] == 0
+    assert t["recall_loss"] == 0.0
+
+
+def test_empty_batch():
+    with DedupService(_cfg()) as svc:
+        assert svc.add_batch([]).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff
+# ---------------------------------------------------------------------------
+
+def test_transient_crash_is_retried_not_degrading():
+    """One scripted WorkerCrash on a worker's first op: the probe retries
+    with backoff, succeeds, no shard is marked dead, verdicts match the
+    no-fault run."""
+    docs = _docs(n=32)
+    with DedupService(_cfg()) as ref:
+        want = np.concatenate([ref.add_batch(docs[:16]),
+                               ref.add_batch(docs[16:])])
+    with DedupService(_cfg(), ServiceConfig(n_workers=4)) as svc:
+        svc.workers[0].injector = FailureInjector(
+            fail_kinds={1: WorkerCrash, 2: ProbeTimeout})
+        got = np.concatenate([svc.add_batch(docs[:16]),
+                              svc.add_batch(docs[16:])])
+        t = svc.telemetry()
+    np.testing.assert_array_equal(got, want)
+    assert t["retries"] >= 1
+    assert t["retry_successes"] >= 1
+    assert t["dead_bands"] == 0
+    assert t["failed_probes"] == 0
+
+
+def test_retry_exhaustion_raises_last_error():
+    svc = DedupService(_cfg(), ServiceConfig(n_workers=2, max_retries=1,
+                                             backoff_base_s=0.001))
+    try:
+        svc.workers[0].dead = True
+        with pytest.raises(WorkerCrash):
+            svc._with_retry(0, "probe", np.zeros(2, np.uint32))
+        assert svc.t["retries"] == 1
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# degraded mode: dead shard -> no crash, widened bound, telemetry
+# ---------------------------------------------------------------------------
+
+def test_dead_worker_degrades_service_with_telemetry():
+    """Kill one worker outright (every call refused): its bands go dead
+    after retry exhaustion, subsequent batches skip them, the service keeps
+    answering, and telemetry reports the widened false-negative bound."""
+    docs = _docs(n=48)
+    with DedupService(_cfg()) as full:
+        full_flags = np.concatenate(
+            [full.add_batch(docs[lo:lo + 16]) for lo in (0, 16, 32)])
+    svc = ServiceConfig(n_workers=4, max_retries=1, backoff_base_s=0.001)
+    with DedupService(_cfg(), svc) as deg:
+        deg.workers[0].dead = True               # owns bands 0 and 4
+        deg_flags = np.concatenate(
+            [deg.add_batch(docs[lo:lo + 16]) for lo in (0, 16, 32)])
+        t = deg.telemetry()
+        rb = deg.recall_bound(0.8)
+    assert t["dead_bands"] == 2
+    assert t["live_bands"] == 6
+    assert t["failed_probes"] == 2               # marked dead on 1st batch
+    assert t["skipped_probes"] == 4              # 2 bands x 2 later batches
+    assert t["dropped_inserts"] > 0
+    assert t["recall_at_threshold_live"] < t["recall_at_threshold_full"]
+    assert t["recall_loss"] > 0
+    assert rb["live"] < rb["full"]
+    # degradation loses candidates, it never invents them: every flagged
+    # dup was verified by exact signature Jaccard >= threshold
+    assert deg_flags.sum() <= full_flags.sum()
+    # and with 6/8 bands live the near-dup corpus is still mostly caught
+    assert deg_flags.sum() >= 0.5 * full_flags.sum()
+
+
+def test_real_timeout_marks_shard_dead_without_hanging():
+    """A straggling worker that blows the RPC deadline (real wall-clock
+    timeout, not a scripted exception) degrades exactly like a crash."""
+    docs = _docs(n=16)
+    svc = ServiceConfig(n_workers=4, probe_timeout_s=0.05, max_retries=1,
+                        backoff_base_s=0.001)
+    with DedupService(_cfg(), svc) as deg:
+        deg.workers[1].delay_s = 0.5             # owns bands 1 and 5
+        flags = deg.add_batch(docs)
+        t = deg.telemetry()
+    assert flags.shape == (16,)
+    assert t["dead_bands"] == 2
+    assert t["recall_loss"] > 0
+
+
+def test_revive_restores_full_bound():
+    with DedupService(_cfg()) as svc:
+        svc.dead[3] = True
+        assert svc.recall_bound()["live"] < svc.recall_bound()["full"]
+        svc.revive(3)
+        rb = svc.recall_bound()
+        assert rb["live"] == rb["full"]
+
+
+# ---------------------------------------------------------------------------
+# hedged probes
+# ---------------------------------------------------------------------------
+
+def test_hedged_probe_beats_straggler():
+    """First attempt straggles (one-shot), hedge fires and wins: no
+    timeout, no retry, verdicts unchanged, hedge counters tick."""
+    docs = _docs(n=16)
+    with DedupService(_cfg()) as ref:
+        want = ref.add_batch(docs)
+    svc = ServiceConfig(n_workers=2, probe_timeout_s=5.0,
+                        hedge_after_s=0.02)
+    with DedupService(_cfg(), svc) as hedged:
+        w = hedged.workers[0]
+        box = {"slow": 1}
+        orig = ShardWorker.call
+
+        def straggle_once(self, op, band, *args):
+            if box["slow"]:
+                box["slow"] -= 1
+                import time
+                time.sleep(0.3)
+            return orig(self, op, band, *args)
+
+        w.call = types.MethodType(straggle_once, w)
+        got = hedged.add_batch(docs)
+        t = hedged.telemetry()
+    np.testing.assert_array_equal(got, want)
+    assert t["hedges"] >= 1
+    assert t["hedge_wins"] >= 1
+    assert t["retries"] == 0
+    assert t["dead_bands"] == 0
+
+
+# ---------------------------------------------------------------------------
+# elastic snapshot / restore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w_save,w_load", [(4, 2), (2, 5), (1, 8)])
+def test_elastic_restore_across_worker_counts(tmp_path, w_save, w_load):
+    """A snapshot written under one worker count restores onto another
+    (band -> worker placement is the pure function b % n_workers) and
+    continues bit-identically — including against a resumed process whose
+    own draw differs (seed override proves params-before-state)."""
+    docs = _docs(n=48, seed=17)
+    with MinHashDeduper(_cfg()) as oracle:
+        oracle.add_batch(docs[:24])
+        want = oracle.add_batch(docs[24:])
+        want_state = oracle.export_state()
+
+    with DedupService(_cfg(), ServiceConfig(n_workers=w_save)) as svc1:
+        svc1.add_batch(docs[:24])
+        svc1.snapshot(str(tmp_path), 1)
+    cfg2 = dataclasses.replace(_cfg(), seed=99)
+    with DedupService(cfg2, ServiceConfig(n_workers=w_load)) as svc2:
+        epoch, _ = svc2.restore(str(tmp_path))
+        assert epoch == 1
+        got = svc2.add_batch(docs[24:])
+        got_state = svc2.export_state()
+        assert svc2.telemetry()["resumes"] == 1
+    np.testing.assert_array_equal(got, want)
+    # oracle tree: {"params", "sigs", "index"}; service: {"params", "sigs",
+    # "shards", ...} — same content, the service just renames the band plane
+    for a, b, part in ((got_state["params"], want_state["params"], "params"),
+                       (got_state["shards"], want_state["index"], "bands")):
+        for outer in a:
+            assert set(a[outer]) == set(b[outer]), (part, outer)
+            for k in a[outer]:
+                np.testing.assert_array_equal(a[outer][k], b[outer][k],
+                                              err_msg=f"{part}:{outer}:{k}")
+    np.testing.assert_array_equal(got_state["sigs"], want_state["sigs"])
+
+
+def test_restore_preserves_degradation_mask(tmp_path):
+    with DedupService(_cfg()) as svc1:
+        svc1.add_batch(_docs(n=16))
+        svc1.dead[2] = True
+        svc1.snapshot(str(tmp_path), 1)
+    with DedupService(_cfg()) as svc2:
+        svc2.restore(str(tmp_path))
+        assert bool(svc2.dead[2])
+        assert svc2.telemetry()["dead_bands"] == 1
+
+
+def test_snapshot_band_count_mismatch_rejected(tmp_path):
+    with DedupService(_cfg()) as svc1:
+        svc1.add_batch(_docs(n=8))
+        svc1.snapshot(str(tmp_path), 1)
+    with DedupService(_cfg(lsh_bands=4)) as svc2:
+        with pytest.raises(ValueError, match="bands"):
+            svc2.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# the job driver
+# ---------------------------------------------------------------------------
+
+def test_run_dedup_job_no_faults_matches_batch_loop(tmp_path):
+    docs = _docs(n=40, seed=23)
+    with DedupService(_cfg()) as ref:
+        want = np.concatenate(
+            [ref.add_batch(docs[lo:lo + 8]) for lo in range(0, 40, 8)])
+    with DedupService(_cfg()) as svc:
+        res = run_dedup_job(svc, docs, directory=str(tmp_path),
+                            batch_docs=8, snapshot_every=2)
+    np.testing.assert_array_equal(res["flags"], want)
+    assert res["restarts"] == 0
+    assert res["batches"] == 5
+    # snapshots are atomic: no stale tmp left behind
+    import os
+    assert not any(x.endswith(".tmp") for x in os.listdir(tmp_path))

@@ -122,6 +122,37 @@ def test_checkpoint_ignores_partial_tmp(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) is None
 
 
+def test_checkpoint_ignores_torn_meta(tmp_path):
+    # rename happened but meta.json is torn/unreadable: not a restorable
+    # checkpoint, latest_step must fall back to the previous good one
+    state = {"w": jnp.arange(4)}
+    ckpt.save(state, str(tmp_path), 3)
+    os.makedirs(tmp_path / "step_00000009")
+    (tmp_path / "step_00000009" / "meta.json").write_text("{not json")
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_flush_joins_async_writers(tmp_path):
+    state = {"w": jnp.arange(8), "b": jnp.ones((3,))}
+    for step in (1, 2, 3):
+        ckpt.save_async(state, str(tmp_path), step)
+    ckpt.flush()                      # shutdown barrier: nothing dropped
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    assert not any(x.endswith(".tmp") for x in os.listdir(tmp_path))
+
+
+def test_checkpoint_rewrite_clears_stale_tmp(tmp_path):
+    # a crash left a half-written tmp for the SAME step; the rewrite must
+    # not inherit its leaves
+    stale = tmp_path / "step_00000005.tmp"
+    os.makedirs(stale)
+    (stale / "zombie.npy").write_bytes(b"junk")
+    ckpt.save({"w": jnp.arange(4)}, str(tmp_path), 5)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    assert not stale.exists()
+    assert "zombie.npy" not in os.listdir(tmp_path / "step_00000005")
+
+
 # ---------------------------------------------------------------------------
 # Fault tolerance
 # ---------------------------------------------------------------------------
@@ -149,6 +180,32 @@ def test_recovery_replays_from_checkpoint(tmp_path):
     # steps 5..6 replayed after the failure at 7 (restore to ckpt@5)
     assert log.count(5) >= 2
     assert sorted(set(log)) == list(range(20))
+
+
+def test_failure_injector_fail_kinds():
+    from repro.train.fault import InjectedFailure, ProbeTimeout, WorkerCrash
+    inj = FailureInjector(fail_at_steps=(3,), fail_kinds={5: ProbeTimeout,
+                                                          7: WorkerCrash})
+    with pytest.raises(ProbeTimeout):
+        inj.maybe_fail(5)
+    inj.maybe_fail(5)                          # fail-once: replay proceeds
+    with pytest.raises(WorkerCrash):
+        inj.maybe_fail(7)
+    with pytest.raises(InjectedFailure) as ei:  # generic kind preserved
+        inj.maybe_fail(3)
+    assert type(ei.value) is InjectedFailure
+    inj.maybe_fail(4)                          # unscripted step: silent
+
+
+def test_recovery_handles_typed_failures(tmp_path):
+    from repro.train.fault import SnapshotInterrupt, WorkerCrash
+    box = {"saved": 0}
+    inj = FailureInjector(fail_kinds={2: WorkerCrash, 6: SnapshotInterrupt})
+    res = run_with_recovery(lambda s: {}, lambda s: box.update(saved=s),
+                            lambda: box["saved"], n_steps=10, ckpt_every=2,
+                            injector=inj)
+    assert res["final_step"] == 10
+    assert res["restarts"] == 2
 
 
 def test_watchdog_flags_stragglers():
