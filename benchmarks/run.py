@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement) and also
 writes a machine-readable JSON map ``{name: us_per_call}`` so the perf
-trajectory is tracked PR over PR (default ``BENCH_pr8.json`` at the repo
+trajectory is tracked PR over PR (default ``BENCH_pr9.json`` at the repo
 root; override the path with REPRO_BENCH_JSON).
 
 Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
@@ -98,10 +98,41 @@ def main() -> None:
             print(line, flush=True)
     except Exception as e:  # noqa: BLE001
         print(f"roofline_summary,0.0,skipped ({type(e).__name__})", flush=True)
+    # static-analysis cost: the --analyze CI gate's wall time is part of the
+    # perf trajectory (a contract matrix that quietly grows to minutes is a
+    # regression), and its finding count must be 0 on a clean tree
+    try:
+        import time
+        from repro.analysis import contracts, discard, lint
+        t0 = time.perf_counter()
+        n_lint = len(lint.lint_tree())
+        t_lint = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        n_disc = (len(discard.static_findings())
+                  + len(discard.verify_decode_discard()))
+        t_disc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        import jax
+        devs = tuple(d for d in (1, 2, 4, 8) if d <= len(jax.devices()))
+        n_con = len(contracts.verify_contracts(device_counts=devs))
+        t_con = time.perf_counter() - t0
+        n_find = n_lint + n_disc + n_con
+        for r in ({"name": "analysis_lint", "us_per_call": t_lint * 1e6,
+                   "derived": f"findings={n_lint}"},
+                  {"name": "analysis_discard", "us_per_call": t_disc * 1e6,
+                   "derived": f"findings={n_disc}"},
+                  {"name": "analysis_contracts", "us_per_call": t_con * 1e6,
+                   "derived": f"findings={n_con} devices={devs}"}):
+            rows.append(r)
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
+                  flush=True)
+        assert n_find == 0, f"analyzer found {n_find} issue(s) on this tree"
+    except Exception as e:  # noqa: BLE001
+        print(f"analysis_pass,0.0,failed ({type(e).__name__})", flush=True)
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr8.json"))
+                     "BENCH_pr9.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

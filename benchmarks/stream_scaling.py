@@ -1,3 +1,5 @@
+# lint: allow-deprecated-shims — benchmarks the demoted bucketed oracle
+# (_signature_many_bucketed) against its streaming replacement
 """On-device streaming executors vs host loop vs one-shot (PR 5 / PR 6).
 
 Three measurements, all parity-asserted before timing so a speedup is never

@@ -1,0 +1,295 @@
+"""Repo-wide AST lint: rules distilled from this repo's real past bugs.
+
+Every rule here is a bug class that actually shipped (and was fixed) in an
+earlier PR, generalized so the *class* cannot come back:
+
+* ``U64-BINCOUNT`` — ``np.bincount`` refuses uint64 input (no safe cast to
+  intp) and raising at count time is the *good* outcome; on some platforms
+  the silent intp cast truncates. The PR 1 fix routed the combined
+  uint64 index through ``.astype(np.int64)``; the rule flags any bincount
+  whose argument traces to a uint64 value without that cast.
+* ``I32-COUNTER`` — an int32 counter on an unbounded stream wraps negative
+  (the PR 4 token-counter bug: ~2.1B tokens ≈ one production afternoon).
+  Counters named like stream totals in ``data/``/``serve/`` must not be
+  int32-initialized; the engine's idiom is a uint32 (lo, hi) pair with
+  explicit carry.
+* ``DONATE-UNCHECKED`` — ``donate_argnums`` is a *request*: XLA silently
+  drops donation it cannot honor, so every module that donates must carry a
+  lowering-level aliasing check (a ``@kernel_contract(donated=...)``
+  declaration verified by ``verify_contracts()``, or a direct
+  ``donation_is_lowered`` / ``donated_marker_count`` probe of the lowered
+  text).
+* ``SHIM-IMPORT`` — the deprecation shims (``repro.kernels.cyclic_fused``,
+  ``Deduper._signature_many_bucketed``) exist only as oracles for the tests
+  that certify their replacements; new call sites must use the plan engine.
+  Opted-in files carry a ``lint: allow-deprecated-shims`` marker comment.
+* ``UNSEEDED-RNG`` — nondeterministic randomness in ``core/``/``kernels/``
+  breaks the bit-identity contracts every test asserts; randomness there
+  must be an explicitly seeded generator (``np.random.default_rng(seed)``,
+  ``jax.random.PRNGKey``).
+
+Findings carry file:line anchors; ``python -m repro.analysis`` exits
+nonzero when any rule fires (the CI contract — ``./test.sh --analyze``).
+Adding a rule = one ``_rule_*`` function appended to :data:`RULES`; each
+gets the parsed tree + source of every file in its scope and appends
+:class:`Finding` objects.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, List, Optional
+
+__all__ = ["Finding", "lint_tree", "lint_file", "RULES", "SHIM_MARKER"]
+
+SHIM_MARKER = "lint: allow-deprecated-shims"
+
+# stream-total counter names the I32-COUNTER rule guards (bounded counters —
+# ring positions, saturating warm-up counts — are deliberately not listed)
+COUNTER_NAMES = frozenset({
+    "steps", "tokens", "token_count", "n_tokens", "total_tokens",
+    "banned", "canary", "windows_total", "symbols_total",
+})
+
+# deprecation shims and where they are allowed to live
+SHIM_MODULES = ("repro.kernels.cyclic_fused",)
+SHIM_ATTRS = ("_signature_many_bucketed",)
+SHIM_HOME = ("src/repro/data/dedup.py", "src/repro/kernels/cyclic_fused.py",
+             "src/repro/kernels/sketch_fused.py")
+
+_INT32_RE = re.compile(r"\bint32\b")        # \b keeps uint32 from matching
+_UINT64_RE = re.compile(r"\buint64\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str       # repo-relative
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def _in(rel: str, *prefixes: str) -> bool:
+    return any(rel == p or rel.startswith(p.rstrip("/") + "/")
+               for p in prefixes)
+
+
+def _seg(src_lines, node) -> str:
+    """Source text of a node (single segment, best effort)."""
+    try:
+        return ast.get_source_segment("\n".join(src_lines), node) or ""
+    except Exception:
+        return ""
+
+
+# ---------------------------------------------------------------------------
+# rules — each: (tree, src, rel) -> findings appended
+# ---------------------------------------------------------------------------
+
+
+def _rule_u64_bincount(tree, src: str, rel: str, out: List[Finding]) -> None:
+    if not _in(rel, "src/repro", "benchmarks"):
+        return
+    lines = src.splitlines()
+
+    def assigned_from_u64(fn, name: str, before: int) -> bool:
+        hit = False
+        for sub in ast.walk(fn):
+            if (isinstance(sub, ast.Assign) and sub.lineno < before
+                    and any(isinstance(t, ast.Name) and t.id == name
+                            for t in sub.targets)):
+                hit = bool(_UINT64_RE.search(_seg(lines, sub.value)))
+        return hit
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Module)):
+            continue
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "bincount" and node.args):
+                continue
+            arg = node.args[0]
+            # routed through .astype(...) — the PR 1 fix shape — is safe
+            if (isinstance(arg, ast.Call)
+                    and isinstance(arg.func, ast.Attribute)
+                    and arg.func.attr == "astype"):
+                continue
+            flagged = bool(_UINT64_RE.search(_seg(lines, arg)))
+            if (not flagged and isinstance(arg, ast.Name)
+                    and not isinstance(fn, ast.Module)):
+                flagged = assigned_from_u64(fn, arg.id, node.lineno)
+            if flagged:
+                out.append(Finding(
+                    "U64-BINCOUNT", rel, node.lineno,
+                    "np.bincount on a uint64 value (no safe intp cast) — "
+                    "route through .astype(np.int64) first"))
+
+
+def _rule_i32_counter(tree, src: str, rel: str, out: List[Finding]) -> None:
+    if not _in(rel, "src/repro/data", "src/repro/serve"):
+        return
+    lines = src.splitlines()
+
+    def is_counter_init(value) -> bool:
+        # a *counter* init is a zero-valued int32 scalar/array constructor
+        # (zeros(...), int32(0), full(..., 0)); casting incoming token-ID
+        # arrays to int32 (jnp.asarray(tokens, jnp.int32)) is not a counter
+        text = _seg(lines, value)
+        if not _INT32_RE.search(text):
+            return False
+        if "zeros" in text:
+            return True
+        return any(isinstance(sub, ast.Constant) and sub.value == 0
+                   for sub in ast.walk(value))
+
+    def check(name: Optional[str], value, lineno: int) -> None:
+        if name in COUNTER_NAMES and is_counter_init(value):
+            out.append(Finding(
+                "I32-COUNTER", rel, lineno,
+                f"stream counter {name!r} initialized as int32 — wraps "
+                f"negative at ~2.1B; use the uint32 (lo, hi) pair idiom"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    check(tgt.id, node.value, node.lineno)
+        elif isinstance(node, ast.Dict):
+            for k, v in zip(node.keys, node.values):
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    check(k.value, v, getattr(v, "lineno", node.lineno))
+
+
+def _rule_donate_unchecked(tree, src: str, rel: str,
+                           out: List[Finding]) -> None:
+    if not _in(rel, "src/repro"):
+        return
+    has_evidence = ("donation_is_lowered" in src
+                    or "donated_marker_count" in src)
+    if not has_evidence:
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "kernel_contract"
+                    and any(kw.arg == "donated" for kw in node.keywords)):
+                has_evidence = True
+                break
+    if has_evidence:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and any(
+                kw.arg == "donate_argnums" for kw in node.keywords):
+            out.append(Finding(
+                "DONATE-UNCHECKED", rel, node.lineno,
+                "donate_argnums without a lowering-level aliasing check — "
+                "XLA drops unhonorable donation silently; declare "
+                "@kernel_contract(donated=...) or probe the lowering with "
+                "analysis.jaxpr.donation_is_lowered"))
+
+
+def _rule_shim_import(tree, src: str, rel: str, out: List[Finding]) -> None:
+    if _in(rel, *SHIM_HOME) or SHIM_MARKER in src:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name in SHIM_MODULES:
+                    out.append(Finding(
+                        "SHIM-IMPORT", rel, node.lineno,
+                        f"import of deprecation shim {alias.name} — use the "
+                        f"plan engine (api.run); oracles opt in with a "
+                        f"'{SHIM_MARKER}' marker"))
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if (mod in SHIM_MODULES
+                    or any(f"{mod}.{a.name}" in SHIM_MODULES
+                           for a in node.names)
+                    or any(a.name in SHIM_ATTRS for a in node.names)):
+                out.append(Finding(
+                    "SHIM-IMPORT", rel, node.lineno,
+                    f"import from deprecation shim ({mod or 'shim attr'}) — "
+                    f"use the plan engine; oracles opt in with a "
+                    f"'{SHIM_MARKER}' marker"))
+        elif (isinstance(node, ast.Attribute)
+              and node.attr in SHIM_ATTRS):
+            out.append(Finding(
+                "SHIM-IMPORT", rel, node.lineno,
+                f"use of deprecated {node.attr} — demoted to a test-only "
+                f"oracle in PR 6; stream the documents through run_stream. "
+                f"Oracles opt in with a '{SHIM_MARKER}' marker"))
+
+
+def _rule_unseeded_rng(tree, src: str, rel: str, out: List[Finding]) -> None:
+    if not _in(rel, "src/repro/core", "src/repro/kernels"):
+        return
+    SEEDLESS_OK = {"default_rng", "SeedSequence", "Generator", "PRNGKey",
+                   "key"}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not isinstance(f, ast.Attribute):
+            continue
+        # np.random.<fn>(...) — the global unseeded RNG; and
+        # default_rng() with no seed argument
+        base = f.value
+        is_np_random = (isinstance(base, ast.Attribute)
+                        and base.attr == "random"
+                        and isinstance(base.value, ast.Name)
+                        and base.value.id in ("np", "numpy"))
+        if is_np_random and f.attr not in SEEDLESS_OK:
+            out.append(Finding(
+                "UNSEEDED-RNG", rel, node.lineno,
+                f"np.random.{f.attr} uses the global unseeded RNG — "
+                f"bit-identity contracts require an explicit seed "
+                f"(np.random.default_rng(seed) / jax.random.PRNGKey)"))
+        elif (f.attr == "default_rng" and not node.args
+              and not node.keywords):
+            out.append(Finding(
+                "UNSEEDED-RNG", rel, node.lineno,
+                "default_rng() without a seed — bit-identity contracts "
+                "require explicit seeding"))
+
+
+RULES: List[Callable] = [
+    _rule_u64_bincount, _rule_i32_counter, _rule_donate_unchecked,
+    _rule_shim_import, _rule_unseeded_rng,
+]
+
+_SCAN_DIRS = ("src/repro", "tests", "benchmarks")
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> List[Finding]:
+    """All rules over one file (each rule applies its own scope filter)."""
+    root = Path(root) if root else _repo_root()
+    rel = str(Path(path).resolve().relative_to(root))
+    src = Path(path).read_text()
+    tree = ast.parse(src, filename=rel)
+    out: List[Finding] = []
+    for rule in RULES:
+        rule(tree, src, rel, out)
+    return out
+
+
+def lint_tree(root: Optional[Path] = None) -> List[Finding]:
+    """All rules over the whole repo (src/repro, tests, benchmarks)."""
+    root = Path(root) if root else _repo_root()
+    findings: List[Finding] = []
+    for d in _SCAN_DIRS:
+        base = root / d
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            findings.extend(lint_file(path, root))
+    return findings

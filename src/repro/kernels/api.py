@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import kernel_contract
 from repro.kernels import ref as _ref
 from repro.kernels import sketch_fused as _sf
 from repro.kernels.plan import (BloomSpec, CountMinSpec, DecodeSpec, HashSpec,
@@ -274,6 +275,7 @@ def shape_outputs(plan: SketchPlan, out: Dict[str, jnp.ndarray],
     return results
 
 
+@kernel_contract(pallas_calls=1, scans=0, while_loops=0, collectives="none")
 def decode(spec: DecodeSpec, logits, prefix, ready, bloom, h1, *,
            canary_bits=None, impl: str = "auto", **tile_kw) -> Dict[str, jnp.ndarray]:
     """Decode-time n-gram plane: hash every candidate continuation, probe
@@ -342,6 +344,7 @@ def decode(spec: DecodeSpec, logits, prefix, ready, bloom, h1, *,
                                   interpret=not on_tpu(), **tile_kw)
 
 
+@kernel_contract(pallas_calls=1, scans=0, while_loops=0, collectives="none")
 def run(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None, n_windows=None,
         operands=None, impl: str = "auto", w_start=None,
         **tile_kw) -> Dict[str, jnp.ndarray]:

@@ -43,6 +43,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis.contracts import kernel_contract
 from repro.kernels import api
 from repro.kernels.plan import CountMinSpec, HLLSpec, SketchPlan
 
@@ -141,6 +142,8 @@ def _run_sharded(plan: SketchPlan, mesh: Mesh, ref_path: bool, tile,
                            operands)
 
 
+@kernel_contract(pallas_calls=1, scans=0, while_loops=0,
+                 collectives="global-sketch-merge")
 def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
                 n_windows=None, operands=None, impl: str = "auto",
                 w_start=None, mesh: Optional[Mesh] = None,
@@ -194,6 +197,7 @@ def run_sharded(plan: SketchPlan, h1v: jnp.ndarray, *, h1v_b=None,
     return api.shape_outputs(plan, out, lead)
 
 
+@kernel_contract(collectives="none")
 def rowwise(fn, mesh: Mesh, n_row: int):
     """Wrap a purely per-row function in ``shard_map`` over the data mesh.
 

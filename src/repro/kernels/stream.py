@@ -94,6 +94,7 @@ Entry points:
 """
 from __future__ import annotations
 
+import contextvars
 import functools
 from typing import Dict, Optional
 
@@ -104,6 +105,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis.contracts import kernel_contract
 from repro.kernels import api, shard
 from repro.kernels.plan import CountMinSpec, HLLSpec, SketchPlan
 
@@ -111,18 +113,21 @@ _EXECUTORS = ("scan", "grid", "host")
 
 # device dispatches issued by this module's executors (one jitted call = one
 # XLA execution); the one-dispatch-per-stream property is asserted against
-# this counter in tests and reported by the benchmarks
-_dispatches = 0
+# this counter in tests and reported by the benchmarks. Context-local
+# (contextvars): concurrent streams — asyncio servers, parallel test
+# workers — each observe only their own dispatches instead of racing on a
+# module global
+_dispatches = contextvars.ContextVar("repro.kernels.stream._dispatches",
+                                     default=0)
 
 
 def dispatch_count() -> int:
-    """Total chunk-executor device dispatches issued by this module."""
-    return _dispatches
+    """Chunk-executor device dispatches issued in this context."""
+    return _dispatches.get()
 
 
 def _dispatched(n: int = 1) -> None:
-    global _dispatches
-    _dispatches += n
+    _dispatches.set(_dispatches.get() + n)
 
 # backends whose runtime implements buffer donation; elsewhere "auto" skips
 # the request (XLA would silently ignore it — harmless, but explicit beats
@@ -628,6 +633,12 @@ def import_state(plan: SketchPlan, tree: Dict, *, mesh=None,
     return state
 
 
+@kernel_contract(variant="scan", pallas_calls=1, scans=1, while_loops=0,
+                 collectives="global-sketch-merge", donated=("state",))
+@kernel_contract(variant="grid", pallas_calls=1, scans=0, while_loops=0,
+                 collectives="none", donated=("state",))
+@kernel_contract(variant="host", pallas_calls=1, scans=0, while_loops=0,
+                 collectives="none", donated=("state",))
 def run_stream(plan: SketchPlan, h1v, *, chunk_s: int, h1v_b=None,
                n_windows=None, operands=None, impl: str = "auto",
                donate="auto", mesh=None, data_shards: Optional[int] = None,

@@ -24,6 +24,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.jaxpr import donation_is_lowered
 from repro.configs.base import SHAPES, V5E
 from repro.configs.registry import ARCHS, ASSIGNED, get_config, shape_applicable
 from repro.launch import hlo_analysis
@@ -103,8 +104,14 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t0 = time.time()
         compiled = lowered.compile()
         t_compile = time.time() - t0
+    # donation is a request, not a guarantee: for the donating cells (train
+    # donates state, decode donates caches) confirm XLA actually lowered the
+    # input/output aliasing, and surface the verdict in the artifact
+    donates = shape.kind in ("train", "decode")
+    donation_ok = donation_is_lowered(lowered.as_text()) if donates else None
     return compiled, lowered, {"lower_s": t_lower, "compile_s": t_compile,
-                               "mesh": _mesh_tag(multi_pod)}
+                               "mesh": _mesh_tag(multi_pod),
+                               "donation_lowered": donation_ok}
 
 
 def _probe_costs(compiled) -> dict:
@@ -204,6 +211,7 @@ def analyze(compiled, arch: str, shape_name: str, meta: dict,
         "kind": shape.kind,
         "lower_s": round(meta["lower_s"], 2),
         "compile_s": round(meta["compile_s"], 2),
+        "donation_lowered": meta.get("donation_lowered"),
         "flops_per_device": flops_dev,
         "xla_flops_per_device": xla_flops_dev,
         "bytes_per_device": bytes_dev,

@@ -25,6 +25,28 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def _collective_phase(op: str) -> Tuple[str, str]:
+    """Classify an HLO opcode as a collective: ``(kind, phase)``.
+
+    ``phase`` is ``"sync"`` for the plain op, ``"start"``/``"done"`` for the
+    async pair XLA splits long-latency collectives into. Counting rule
+    (shared by :func:`count_collectives` and :func:`collective_bytes`): a
+    collective is counted at its *issue* point — the sync op or the
+    ``-start`` half — and the ``-done`` half is recognized but never
+    counted, so an async pair contributes exactly one collective and its
+    operand bytes exactly once. Returns ``("", "")`` for non-collectives
+    (including unrecognized ``kind-<suffix>`` forms, which must not be
+    silently folded into the kind's count)."""
+    for kind in COLLECTIVES:
+        if op == kind:
+            return kind, "sync"
+        if op == kind + "-start":
+            return kind, "start"
+        if op == kind + "-done":
+            return kind, "done"
+    return "", ""
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _TYPE_RE.findall(type_str):
@@ -49,17 +71,13 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
             continue
         name, type_str, op = m.group(1), m.group(2), m.group(3)
         sizes[name] = _type_bytes(type_str)
-        for kind in COLLECTIVES:
-            # match the op name exactly (op may carry a suffix like `-start`)
-            if op == kind or op.startswith(kind + "-"):
-                if op.endswith("-done"):
-                    break  # avoid double count of async pairs
-                paren = line.find("(")
-                args = line[paren:] if paren != -1 else ""
-                # strip metadata braces to limit operand regex scope
-                args = args.split("metadata=")[0]
-                coll_lines.append((kind, args))
-                break
+        kind, phase = _collective_phase(op)
+        if kind and phase != "done":   # async pairs: bytes at -start only
+            paren = line.find("(")
+            args = line[paren:] if paren != -1 else ""
+            # strip metadata braces to limit operand regex scope
+            args = args.split("metadata=")[0]
+            coll_lines.append((kind, args))
     out = {k: 0 for k in COLLECTIVES}
     for kind, args in coll_lines:
         for op_name in _OPERAND_RE.findall(args):
@@ -109,14 +127,33 @@ def dot_flops(hlo_text: str) -> float:
 
 
 def count_collectives(hlo_text: str) -> Dict[str, int]:
+    """Collectives per kind, counting each async ``-start``/``-done`` pair
+    exactly once (at the ``-start``); sync forms count as themselves."""
     counts = {k: 0 for k in COLLECTIVES}
     for line in hlo_text.splitlines():
         m = _DEF_RE.match(line)
         if not m:
             continue
-        op = m.group(3)
-        for kind in COLLECTIVES:
-            if (op == kind or op.startswith(kind + "-")) and not op.endswith("-done"):
-                counts[kind] += 1
-                break
+        kind, phase = _collective_phase(m.group(3))
+        if kind and phase != "done":
+            counts[kind] += 1
     return counts
+
+
+def async_collective_pairs(hlo_text: str) -> Dict[str, Tuple[int, int]]:
+    """Per kind: ``(starts, dones)`` of the async split form. A well-formed
+    per-device program has ``starts == dones`` for every kind; a mismatch
+    means the text was truncated or the parser missed a phase — either way
+    the exactly-once counting guarantee is void, so contracts check this
+    alongside :func:`count_collectives`."""
+    pairs = {k: [0, 0] for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        kind, phase = _collective_phase(m.group(3))
+        if kind and phase == "start":
+            pairs[kind][0] += 1
+        elif kind and phase == "done":
+            pairs[kind][1] += 1
+    return {k: (s, d) for k, (s, d) in pairs.items()}

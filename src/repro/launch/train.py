@@ -73,6 +73,16 @@ def main():
 
         state, _ = init_state(jax.random.PRNGKey(0), cfg, sched)
         state = jax.device_put(state, state_sh)
+
+        # donate_argnums is a request XLA may silently drop; verify the
+        # state donation actually lowered to input/output aliasing before
+        # spending steps on it (lower only — the loop's first call compiles)
+        from repro.analysis.jaxpr import donation_is_lowered
+        batch_tmpl = {"tokens": jax.ShapeDtypeStruct(
+            (args.batch, args.seq), jnp.int32)}
+        if not donation_is_lowered(step_fn.lower(state, batch_tmpl).as_text()):
+            print("warning: state donation was NOT lowered to aliasing — "
+                  "expect double-buffered optimizer state")
         start = 0
         if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
             state, start = ckpt.restore(state, args.ckpt_dir,

@@ -36,6 +36,7 @@ index) before the shard region.
 """
 from __future__ import annotations
 
+import contextvars
 import functools
 from typing import Dict, Optional, Sequence
 
@@ -43,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import kernel_contract
 from repro.core import gf2
 from repro.kernels import api, shard
 from repro.kernels import ref as _kref
@@ -54,18 +56,20 @@ _U32 = jnp.uint32
 # device dispatches issued by this module (one jitted call = one XLA
 # execution): decode steps, prompt primes and churn ops all count, so the
 # one-dispatch-per-decode-step property is assertable against this counter
-# (same instrumentation contract as kernels.stream.dispatch_count)
-_dispatches = 0
+# (same instrumentation contract as kernels.stream.dispatch_count).
+# Context-local (contextvars): pools served from different asyncio tasks or
+# threads each observe their own dispatch count
+_dispatches = contextvars.ContextVar("repro.serve.sessions._dispatches",
+                                     default=0)
 
 
 def dispatch_count() -> int:
-    """Total session-pool device dispatches issued by this module."""
-    return _dispatches
+    """Session-pool device dispatches issued in this context."""
+    return _dispatches.get()
 
 
 def _dispatched(n: int = 1) -> None:
-    global _dispatches
-    _dispatches += n
+    _dispatches.set(_dispatches.get() + n)
 
 
 def init_state(spec: DecodeSpec, capacity: int) -> Dict[str, jnp.ndarray]:
@@ -380,6 +384,8 @@ class SessionPool:
         self.state = fn(self.spec, self.mesh, T, self.state, tokens,
                         lengths, self.h1)
 
+    @kernel_contract(pallas_calls=1, scans=0, while_loops=0,
+                     collectives="none", donated=("state",))
     def step(self, logits, *, key=None, temperature: float = 1.0,
              top_k: int = 0) -> jnp.ndarray:
         """One decode step for every active session — ONE device dispatch.

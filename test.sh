@@ -9,7 +9,14 @@
 # --quick — kernel/plan parity tests only (the hash->sketch data-plane,
 #   including the CountMin parity leg and the chunked streaming executor):
 #   fast signal when iterating on kernels/, skipping the model/train/serve
-#   suites.
+#   suites. The repo-wide AST lint runs first (sub-second, catches the
+#   known bug classes before any kernel compiles).
+#
+# --analyze — the full static-analysis pass (python -m repro.analysis):
+#   repo-wide lint, Theorem-1/2 discard checking (AST + traced jaxprs), and
+#   the kernel-contract matrix (every @kernel_contract entry point traced
+#   across both hash families and 1/2/4/8 virtual devices). Nonzero exit on
+#   any finding — the CI gate.
 #
 # --dist — the multi-device suites only: run_sharded vs api.run parity at
 #   1/2/4/8 virtual devices (tests/test_shard.py), the sharded-streaming
@@ -43,9 +50,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}"
 if [[ "${1:-}" == "--quick" ]]; then
   shift
+  python -m repro.analysis --lint
   exec python -m pytest -x -q tests/test_kernels.py tests/test_sketch_fused.py \
     tests/test_plan_api.py tests/test_countmin.py tests/test_stream.py \
     tests/test_stream_scan.py "$@"
+fi
+if [[ "${1:-}" == "--analyze" ]]; then
+  shift
+  exec python -m repro.analysis "$@"
 fi
 if [[ "${1:-}" == "--dist" ]]; then
   shift

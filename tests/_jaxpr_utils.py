@@ -1,17 +1,16 @@
-"""Shared jaxpr introspection helpers for the parity test suites."""
+"""DEPRECATED shim — the jaxpr helpers moved to :mod:`repro.analysis.jaxpr`.
 
+The analysis package's walker is a superset (primitive/collective census,
+donation checks from lowered text, x64-leak detection, VMEM estimates) and
+is what the kernel contracts run on; import from there. This re-export
+keeps any straggler branch importing ``_jaxpr_utils`` alive for one
+deprecation cycle.
+"""
+import warnings
 
-def count_primitive(jaxpr, name: str) -> int:
-    """Occurrences of primitive ``name`` in ``jaxpr``, recursing into
-    nested jaxprs (pjit bodies, shard_map, custom calls)."""
-    cnt = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            cnt += 1
-        for v in eqn.params.values():
-            for u in (v if isinstance(v, (list, tuple)) else [v]):
-                if hasattr(u, "jaxpr"):
-                    cnt += count_primitive(u.jaxpr, name)
-                elif hasattr(u, "eqns"):
-                    cnt += count_primitive(u, name)
-    return cnt
+from repro.analysis.jaxpr import count_primitive  # noqa: F401
+
+warnings.warn(
+    "tests._jaxpr_utils is deprecated: import count_primitive (and the "
+    "rest of the walker) from repro.analysis.jaxpr",
+    DeprecationWarning, stacklevel=2)

@@ -25,7 +25,8 @@ from repro.kernels import api, ref, shard
 from repro.kernels.plan import (CountMinSpec, HashSpec, HLLSpec, MinHashSpec,
                                 SketchPlan)
 from repro.kernels.sketch_fused import sketch_plan_fused
-from _jaxpr_utils import count_primitive as _count_primitive
+from repro.analysis.jaxpr import (assert_counts,
+                                  count_primitive as _count_primitive)
 
 N_DEV = len(jax.devices())
 DEPTH = 4
@@ -169,8 +170,7 @@ def test_cms_combine_is_single_psum():
             data_shards=d)["freq"]
 
     jaxpr = jax.make_jaxpr(fn)(_h1v((4, 128)))
-    assert _count_primitive(jaxpr.jaxpr, "psum") == 1
-    assert _count_primitive(jaxpr.jaxpr, "pmax") == 0
+    assert_counts(jaxpr, psum=1, pmax=0)
 
 
 def test_cms_spec_and_operand_validation():

@@ -137,7 +137,7 @@ def test_stats_update_is_one_rolling_hash_pass(family):
     # the CMS leg)
     import jax
     import jax.numpy as jnp
-    from _jaxpr_utils import count_primitive
+    from repro.analysis.jaxpr import count_primitive
 
     st = NgramStats(StatsConfig(family=family, vocab=1 << 12,
                                 cms_log2_width=10, impl="pallas"))

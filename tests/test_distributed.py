@@ -122,7 +122,7 @@ def test_dryrun_cell_on_debug_mesh():
     """End-to-end dry-run machinery on an 8-device mesh (fast)."""
     print(_run("""
     import jax
-    from repro.launch import hlo_analysis
+    from repro.analysis import jaxpr as jxa
     from repro.launch.mesh import make_debug_mesh
     from repro.launch.shardings import shapes_and_axes_state, tree_shardings
     from repro.train.step import make_train_step
@@ -146,8 +146,8 @@ def test_dryrun_cell_on_debug_mesh():
             cost = cost[0]
         assert cost.get("flops", 0) > 0
         text = compiled.as_text()
-        coll = hlo_analysis.collective_bytes(text)
-        counts = hlo_analysis.count_collectives(text)
+        coll = jxa.collective_bytes_hlo(text)
+        counts = jxa.count_collectives_hlo(text)
         assert coll["total"] > 0, counts        # FSDP must all-gather params
         assert sum(counts.values()) > 0
         mem = compiled.memory_analysis()
@@ -174,3 +174,48 @@ def test_hlo_parser_units():
     assert cb["collective-permute"] == 16 * 64 * 4
     assert count_collectives(hlo)["all-gather"] == 1
     assert dot_flops(hlo) == 2 * 64 * 64 * 64
+
+
+ASYNC_HLO = """
+  %p0 = f32[16,64]{1,0} parameter(0)
+  %ags = (f32[16,64], f32[64,64]) all-gather-start(%p0), replica_groups={}
+  %agd = f32[64,64]{1,0} all-gather-done(%ags)
+  %ars = f32[64,64]{1,0} all-reduce-start(%agd), to_apply=%add
+  %ard = f32[64,64]{1,0} all-reduce-done(%ars)
+  ROOT %cp = f32[16,64]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+"""
+
+
+def test_async_collectives_counted_exactly_once():
+    """An async -start/-done pair is ONE collective (counted at issue), and
+    its operand bytes are charged once — the -done half is recognized but
+    never counted. Exposed via the analysis package (the suites and the
+    contract checker share this parser)."""
+    from repro.analysis.jaxpr import (async_collective_pairs,
+                                      collective_bytes_hlo,
+                                      count_collectives_hlo)
+    counts = count_collectives_hlo(ASYNC_HLO)
+    assert counts["all-gather"] == 1          # start only, done excluded
+    assert counts["all-reduce"] == 1
+    assert counts["collective-permute"] == 1  # sync form counts as itself
+    cb = collective_bytes_hlo(ASYNC_HLO)
+    assert cb["all-gather"] == 16 * 64 * 4    # operand bytes at -start only
+    assert cb["all-reduce"] == 64 * 64 * 4
+    pairs = async_collective_pairs(ASYNC_HLO)
+    assert pairs["all-gather"] == (1, 1)
+    assert pairs["all-reduce"] == (1, 1)
+    assert pairs["collective-permute"] == (0, 0)   # sync: no async halves
+
+
+def test_async_collective_pairs_flags_truncation():
+    """A missing -done half shows up as a start/done mismatch — the signal
+    the contract checker uses to refuse a truncated HLO text."""
+    from repro.analysis.jaxpr import async_collective_pairs
+    truncated = "\n".join(ASYNC_HLO.splitlines()[:3])   # start without done
+    s, d = async_collective_pairs(truncated)["all-gather"]
+    assert (s, d) == (1, 0)
+
+    # unrecognized suffixes must not fold into the kind's count
+    from repro.launch.hlo_analysis import _collective_phase
+    assert _collective_phase("all-gather-update") == ("", "")
+    assert _collective_phase("all-gather") == ("all-gather", "sync")

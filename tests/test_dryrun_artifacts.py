@@ -48,6 +48,19 @@ def test_roofline_terms_sane():
         assert frac is not None and 0 < frac <= 1.5, (key, frac)
 
 
+def test_donating_cells_actually_lowered_donation():
+    """Train cells donate the state, decode cells donate the caches; the
+    driver records ``analysis.jaxpr.donation_is_lowered`` of the lowered
+    text — a cell where XLA silently dropped the aliasing is a regression
+    (double-buffered state on every step). Artifacts from before the field
+    existed are tolerated (re-sweep refreshes them)."""
+    for key, r in RECS.items():
+        if not r.get("ok") or "donation_lowered" not in r:
+            continue
+        if r.get("kind") in ("train", "decode"):
+            assert r["donation_lowered"] is True, key
+
+
 def test_useful_flops_ratio_bounds():
     for key, r in RECS.items():
         if not r.get("ok"):

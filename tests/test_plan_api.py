@@ -21,7 +21,7 @@ from repro.kernels import api, ops, ref
 from repro.kernels.plan import (BloomSpec, HashSpec, HLLSpec, MinHashSpec,
                                 SketchPlan)
 from repro.kernels.sketch_fused import sketch_plan_fused
-from _jaxpr_utils import count_primitive as _count_primitive
+from repro.analysis.jaxpr import count_primitive as _count_primitive
 
 KEY = jax.random.PRNGKey(0)
 

@@ -28,10 +28,7 @@ from repro.serve import sessions as sess
 from repro.serve import telemetry
 from repro.serve.engine import NoRepeatNgram, SamplerConfig, ServeEngine
 
-from _jaxpr_utils import count_primitive
-
-COLLECTIVES = ("psum", "pmax", "pmin", "all_gather", "all_to_all",
-               "ppermute", "reduce_scatter")
+from repro.analysis.jaxpr import assert_no_collectives, count_primitive
 
 
 def _rand_inputs(rng, spec, B, V, fill=0.3):
@@ -420,8 +417,7 @@ def test_pool_sharded_zero_collectives():
         lambda st, lg, h, k, t: sess._step_body(
             spec, True, mesh, (), 0.8, 5, st, lg, h, None, k, t))(
         state, logits, h1, jax.random.PRNGKey(0), jnp.int32(0))
-    for prim in COLLECTIVES:
-        assert count_primitive(jx.jaxpr, prim) == 0, prim
+    assert_no_collectives(jx)
     assert count_primitive(jx.jaxpr, "shard_map") == 1
 
 

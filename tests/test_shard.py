@@ -24,7 +24,8 @@ from repro.core import CountMinSketch, MinHash
 from repro.kernels import api, shard
 from repro.kernels.plan import (BloomSpec, CountMinSpec, HashSpec, HLLSpec,
                                 MinHashSpec, SketchPlan)
-from _jaxpr_utils import count_primitive as _count_primitive
+from repro.analysis.jaxpr import (assert_counts, assert_no_collectives,
+                                  count_primitive as _count_primitive)
 
 N_DEV = len(jax.devices())
 
@@ -139,8 +140,7 @@ def test_hll_combine_is_single_pmax():
         return shard.run_sharded(plan, x, data_shards=d)["card"]
 
     jaxpr = jax.make_jaxpr(fn)(_h1v((4, 128)))
-    assert _count_primitive(jaxpr.jaxpr, "pmax") == 1
-    assert _count_primitive(jaxpr.jaxpr, "psum") == 0
+    assert_counts(jaxpr, pmax=1, psum=0)
 
 
 def test_row_parallel_sketches_need_no_collective():
@@ -157,8 +157,7 @@ def test_row_parallel_sketches_need_no_collective():
                                  data_shards=d)
 
     jaxpr = jax.make_jaxpr(fn)(_h1v((4, 128)), _h1v((4, 128), 1))
-    for prim in ("pmax", "psum", "all_gather", "all_to_all"):
-        assert _count_primitive(jaxpr.jaxpr, prim) == 0, prim
+    assert_no_collectives(jaxpr)
 
 
 def test_data_mesh_is_cached_per_devices_and_count():

@@ -1,3 +1,5 @@
+# lint: allow-deprecated-shims — this suite certifies the streaming executor
+# against the demoted bucketed oracle (_signature_many_bucketed)
 """Chunked streaming executor (kernels/stream.py) — PR 5 acceptance.
 
 All bit-exact:
