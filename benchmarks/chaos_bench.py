@@ -1,0 +1,132 @@
+"""Replication economics: what zero-recall-loss failover costs.
+
+Four numbers an operator sizes the replicated dedup tier with:
+
+* **replicated vs unreplicated batch wall time** — r=2 fans every insert
+  out twice and probes still touch one replica: the steady-state tax of
+  holding a hot standby per band.
+* **chaos-storm batch wall time** — the same job under a seeded
+  `ChaosSchedule` fault storm (guarded kills + stragglers + flaky
+  transports): what the failover/hedge/queue machinery costs *while
+  absorbing faults*, with the event census and the (zero) recall loss in
+  the derived column.
+* **failover probe latency** — a batch probe with a dead primary (every
+  probe of its bands retries onto the surviving replica) vs all-live.
+* **read-repair time** — revive after a kill with write-behind queued:
+  queue replay + anti-entropy digest/fetch/merge, with bytes moved.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.dedup import DedupConfig
+from repro.data.service import DedupService, ServiceConfig
+from repro.train.fault import ChaosSchedule
+
+
+def _timeit(fn, reps=3):
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _cfg():
+    return DedupConfig(vocab=65536, n_signatures=32, lsh_bands=8,
+                       threshold=0.6)
+
+
+def _svc_cfg(replication):
+    return ServiceConfig(n_workers=4, replication=replication,
+                         backoff_base_s=0.001)
+
+
+def run(scale: float = 1.0):
+    rows = []
+    rng = np.random.default_rng(0)
+    n = max(24, int(48 * scale))
+    docs = [rng.integers(0, 65536, size=int(m)).astype(np.int32)
+            for m in rng.integers(64, 256, size=n)]
+    batches = [docs[lo:lo + 8] for lo in range(0, n, 8)]
+
+    # -- steady-state replication tax: r=1 vs r=2, no faults ---------------
+    def job(replication, sched=None):
+        with DedupService(_cfg(), _svc_cfg(replication)) as svc:
+            t0 = time.perf_counter()
+            for t, sel in enumerate(batches):
+                if sched is not None:
+                    sched.apply(svc, t)
+                svc.add_batch(sel)
+            if sched is not None:
+                sched.finish(svc)
+            dt = time.perf_counter() - t0
+            return dt / len(batches), svc.telemetry()
+
+    job(1)                                     # warm the jit caches once
+    t_r1, _ = job(1)
+    t_r2, _ = job(2)
+    rows.append({"name": "service_batch_r1",
+                 "us_per_call": t_r1 * 1e6,
+                 "derived": "unreplicated baseline"})
+    rows.append({"name": "service_batch_r2",
+                 "us_per_call": t_r2 * 1e6,
+                 "derived": f"{t_r2 / t_r1:.2f}x r1; hot standby per band"})
+
+    # -- the same job inside a seeded fault storm --------------------------
+    sched = ChaosSchedule(7, n_batches=len(batches), n_workers=4,
+                          replication=2, slow_delay_s=0.002)
+    c = sched.counts()
+    t_storm, tele = job(2, sched)
+    rows.append({
+        "name": "service_batch_r2_chaos",
+        "us_per_call": t_storm * 1e6,
+        "derived": (f"{c['total']} events "
+                    f"(kill={c['kill']} revive={c['revive']} "
+                    f"slow={c['slow']} flaky={c['flaky']}); "
+                    f"recall_loss={tele['recall_loss']:.4f} "
+                    f"repairs={tele['repairs']}")})
+
+    # -- failover probe latency: dead primary vs all live ------------------
+    probe = [rng.integers(0, 65536, size=128).astype(np.int32)
+             for _ in range(16)]
+    with DedupService(_cfg(), _svc_cfg(2)) as svc:
+        svc.add_batch(docs[:24])               # populate + warm jit
+        kb = svc.dd._band_keys(svc.dd.signature_many(probe))
+        t_live = _timeit(lambda: svc._probe_batch(kb))
+        svc.kill_worker(0)                     # primary of 1/4 of the bands
+        t_over = _timeit(lambda: svc._probe_batch(kb))
+        loss = svc.telemetry()["recall_loss"]
+    rows.append({"name": "service_probe_all_live",
+                 "us_per_call": t_live * 1e6,
+                 "derived": "8 bands x r2"})
+    rows.append({"name": "service_probe_failover",
+                 "us_per_call": t_over * 1e6,
+                 "derived": f"dead primary; recall_loss={loss:.4f}"})
+
+    # -- read-repair: queue replay + anti-entropy diff on revive -----------
+    with DedupService(_cfg(), _svc_cfg(2)) as svc:
+        svc.add_batch(docs[:24])
+        svc.kill_worker(1)
+        for sel in batches[3:]:
+            svc.add_batch(sel)                 # write-behind accumulates
+        t0 = time.perf_counter()
+        svc.revive_worker(1)
+        t_repair = time.perf_counter() - t0
+        tele = svc.telemetry()
+    rows.append({
+        "name": "service_read_repair_worker",
+        "us_per_call": t_repair * 1e6,
+        "derived": (f"{tele['repairs']} replicas, "
+                    f"{tele['repair_bytes']} bytes; "
+                    f"recall_loss={tele['recall_loss']:.4f}")})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement) and also
 writes a machine-readable JSON map ``{name: us_per_call}`` so the perf
-trajectory is tracked PR over PR (default ``BENCH_pr9.json`` at the repo
+trajectory is tracked PR over PR (default ``BENCH_pr10.json`` at the repo
 root; override the path with REPRO_BENCH_JSON).
 
 Scale via REPRO_BENCH_CHARS (default 4.3 Mchar = the paper's corpus size;
@@ -54,9 +54,10 @@ def main() -> None:
     # must precede the section imports below (they import jax); kept inside
     # main() so merely importing this module has no environment side effect
     _bench_env()
-    from benchmarks import (durable_resume, fig1_speed, pipeline_bench,
-                            serve_decode, shard_scaling, sketch_fusion,
-                            stats_onepass, stream_scaling, table1_properties)
+    from benchmarks import (chaos_bench, durable_resume, fig1_speed,
+                            pipeline_bench, serve_decode, shard_scaling,
+                            sketch_fusion, stats_onepass, stream_scaling,
+                            table1_properties)
     n_chars = int(os.environ.get("REPRO_BENCH_CHARS", 4_300_000))
     rows = []
     print("name,us_per_call,derived")
@@ -75,7 +76,8 @@ def main() -> None:
                 (pipeline_bench, {}),
                 (sketch_fusion, {}),
                 (stats_onepass, {}),
-                (durable_resume, {"scale": n_chars / 4_300_000}))
+                (durable_resume, {"scale": n_chars / 4_300_000}),
+                (chaos_bench, {"scale": n_chars / 4_300_000}))
     assert sections[0][0] is shard_scaling, \
         "shard_scaling must be the first benchmark section (see comment)"
     for mod, kw in sections:
@@ -132,7 +134,7 @@ def main() -> None:
     out_path = os.environ.get(
         "REPRO_BENCH_JSON",
         os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                     "BENCH_pr9.json"))
+                     "BENCH_pr10.json"))
     with open(out_path, "w") as f:
         json.dump({r["name"]: round(r["us_per_call"], 1) for r in rows},
                   f, indent=2, sort_keys=True)

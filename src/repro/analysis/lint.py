@@ -27,6 +27,14 @@ earlier PR, generalized so the *class* cannot come back:
   breaks the bit-identity contracts every test asserts; randomness there
   must be an explicitly seeded generator (``np.random.default_rng(seed)``,
   ``jax.random.PRNGKey``).
+* ``SWALLOWED-FAULT`` — the fault plane's typed failures
+  (``InjectedFailure`` and its subclasses) exist so every recovery path is
+  *accounted*: retried, counted, queued, or re-raised. An
+  ``except Exception: pass`` (or ``except WorkerCrash: pass``) in
+  ``data/``/``train/`` silently converts a worker death or corrupt payload
+  into "fine" — the exact failure mode the replicated service's telemetry
+  contract forbids. Handlers must do something observable (the body may
+  not be only ``pass``/``continue``/docstring).
 
 Findings carry file:line anchors; ``python -m repro.analysis`` exits
 nonzero when any rule fires (the CI contract — ``./test.sh --analyze``).
@@ -262,9 +270,60 @@ def _rule_unseeded_rng(tree, src: str, rel: str, out: List[Finding]) -> None:
                 "require explicit seeding"))
 
 
+# exception names whose silent swallow in the fault-bearing layers drops a
+# typed failure on the floor (bare Exception catches everything, so it is
+# in the set too)
+FAULT_NAMES = frozenset({
+    "Exception", "BaseException", "InjectedFailure", "WorkerCrash",
+    "ProbeTimeout", "SnapshotInterrupt", "DataCorruption",
+    "_RETRYABLE", "_FAILOVER",
+})
+
+
+def _rule_swallowed_fault(tree, src: str, rel: str,
+                          out: List[Finding]) -> None:
+    if not _in(rel, "src/repro/data", "src/repro/train"):
+        return
+
+    def names(expr) -> List[str]:
+        # `except X` / `except (X, Y)` / `except mod.X` / bare `except`
+        if expr is None:
+            return ["Exception"]
+        if isinstance(expr, ast.Tuple):
+            return [n for e in expr.elts for n in names(e)]
+        if isinstance(expr, ast.Name):
+            return [expr.id]
+        if isinstance(expr, ast.Attribute):
+            return [expr.attr]
+        return []
+
+    def inert(stmt) -> bool:
+        # statements that observe nothing: pass, continue, bare constants
+        # (docstrings/ellipsis). `...` parses as Expr(Constant).
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            return True
+        return (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        caught = set(names(node.type))
+        if not caught & FAULT_NAMES:
+            continue
+        if all(inert(s) for s in node.body):
+            what = ", ".join(sorted(caught & FAULT_NAMES))
+            out.append(Finding(
+                "SWALLOWED-FAULT", rel, node.lineno,
+                f"except {what} with an inert body drops a typed failure "
+                f"without counting, queueing, or re-raising — recovery "
+                f"paths must be observable (bump a counter, queue a "
+                f"repair, or re-raise)"))
+
+
 RULES: List[Callable] = [
     _rule_u64_bincount, _rule_i32_counter, _rule_donate_unchecked,
-    _rule_shim_import, _rule_unseeded_rng,
+    _rule_shim_import, _rule_unseeded_rng, _rule_swallowed_fault,
 ]
 
 _SCAN_DIRS = ("src/repro", "tests", "benchmarks")

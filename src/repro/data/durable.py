@@ -43,6 +43,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.train import checkpoint as _ckpt
+from repro.train import fault as _fault
 
 # re-exported: a durable shutdown barrier is part of this module's contract
 flush = _ckpt.flush
@@ -83,14 +84,26 @@ def latest_epoch(directory: str) -> Optional[int]:
     return _ckpt.latest_step(directory)
 
 
-def load(directory: str, epoch: Optional[int] = None) -> Tuple[Dict, int]:
+def load(directory: str, epoch: Optional[int] = None, *,
+         on_corrupt: str = "raise") -> Tuple[Dict, int]:
     """Rebuild a durable-state pytree from a snapshot — template-free.
 
     Unlike ``train.checkpoint.restore`` no shape template is needed (sketch
     index state grows between snapshots); the nested dict structure is
     reconstructed from the checkpoint meta's key paths. Returns
     ``(tree, epoch)`` with every leaf a host numpy array.
+
+    Every leaf is crc32-verified against the snapshot meta (written at
+    save time): a flipped byte raises the typed
+    :class:`~repro.train.fault.DataCorruption` instead of riding through
+    the shape/dtype checks silently. ``on_corrupt="skip"`` omits corrupt
+    leaves from the returned tree instead of raising — the replicated
+    dedup service restores this way and read-repairs the damaged replica
+    from its intact snapshot peers.
     """
+    if on_corrupt not in ("raise", "skip"):
+        raise ValueError(f"on_corrupt must be 'raise'|'skip', "
+                         f"got {on_corrupt!r}")
     epoch = epoch if epoch is not None else latest_epoch(directory)
     if epoch is None:
         raise FileNotFoundError(f"no durable snapshot under {directory}")
@@ -104,10 +117,16 @@ def load(directory: str, epoch: Optional[int] = None) -> Tuple[Dict, int]:
             raise ValueError(
                 f"snapshot {d} leaf path {e['path']!r} is not a nested "
                 f"string-keyed dict path — not a durable-state snapshot")
+        try:
+            leaf = _ckpt.read_leaf(d, e)
+        except _fault.DataCorruption:
+            if on_corrupt == "raise":
+                raise
+            continue            # skip: caller repairs from an intact peer
         node = tree
         for k in keys[:-1]:
             node = node.setdefault(k, {})
-        node[keys[-1]] = np.load(os.path.join(d, e["file"]))
+        node[keys[-1]] = leaf
     return tree, epoch
 
 

@@ -34,6 +34,11 @@
 #   (tests/test_service.py), and the train-side checkpoint/injector/recovery
 #   tests (tests/test_train.py).
 #
+# --chaos — the replicated-shard-plane certification: seeded ChaosSchedule
+#   fault storms asserting bit-identical verdicts with zero recall loss
+#   through guarded kill/revive/slow/flaky sequences (tests/test_chaos.py)
+#   plus the service fault-envelope suite (tests/test_service.py).
+#
 # --bench — the device-bench profile (per the olmax/HomebrewNLP exemplar
 #   harnesses): tcmalloc LD_PRELOAD when present (glibc malloc fragments
 #   under jax's large short-lived host buffers), allocator/report and
@@ -73,6 +78,10 @@ if [[ "${1:-}" == "--fault" ]]; then
   shift
   exec python -m pytest -x -q tests/test_durable.py tests/test_service.py \
     tests/test_train.py "$@"
+fi
+if [[ "${1:-}" == "--chaos" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_chaos.py tests/test_service.py "$@"
 fi
 if [[ "${1:-}" == "--bench" ]]; then
   shift

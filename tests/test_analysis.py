@@ -289,6 +289,48 @@ def test_shim_import_is_flagged(tmp_path):
     assert lint.lint_tree(marked) == []
 
 
+def test_swallowed_fault_is_flagged(tmp_path):
+    root = _lint_fixture_tree(tmp_path, "src/repro/data/fix.py", """
+        from repro.train.fault import WorkerCrash, ProbeTimeout
+
+        def probe(worker):
+            try:
+                return worker.call()
+            except WorkerCrash:
+                pass                        # typed failure dropped silently
+            try:
+                return worker.call()
+            except (ProbeTimeout, ValueError):
+                '''even a docstring body observes nothing'''
+            try:
+                return worker.call()
+            except Exception:
+                ...
+    """)
+    findings = lint.lint_tree(root)
+    assert [f.rule for f in findings] == ["SWALLOWED-FAULT"] * 3, findings
+
+    # counted, re-raised, or non-fault handlers are all fine
+    ok = _lint_fixture_tree(tmp_path / "ok", "src/repro/train/fix.py", """
+        from repro.train.fault import WorkerCrash
+
+        def probe(worker, t):
+            try:
+                return worker.call()
+            except WorkerCrash:
+                t["failed"] += 1            # observable: counted
+            try:
+                return worker.call()
+            except WorkerCrash:
+                raise
+            try:
+                return worker.call()
+            except KeyError:
+                pass                        # not a fault-plane type
+    """)
+    assert lint.lint_tree(ok) == []
+
+
 def test_unseeded_rng_is_flagged(tmp_path):
     root = _lint_fixture_tree(tmp_path, "src/repro/core/fix.py", """
         import numpy as np

@@ -21,8 +21,9 @@ from repro.data import durable
 from repro.data.decontam import DecontamConfig, Decontaminator
 from repro.data.dedup import DedupConfig, MinHashDeduper
 from repro.data.stats import NgramStats, StatsConfig
-from repro.train.fault import (FailureInjector, InjectedFailure,
-                               SnapshotInterrupt, WorkerCrash)
+from repro.train.fault import (DataCorruption, FailureInjector,
+                               InjectedFailure, SnapshotInterrupt,
+                               WorkerCrash)
 
 N_DEV = len(jax.devices())
 
@@ -125,7 +126,87 @@ def test_async_save_flush_barrier(tmp_path):
     durable.flush()
     assert durable.latest_epoch(d) == 2
     assert not any(x.endswith(".tmp") for x in os.listdir(d))
-    _assert_tree_equal(durable.load(d)[0], _tree(2))
+
+
+def _flip_one_byte(path, offset=-1):
+    with open(path, "r+b") as f:
+        f.seek(offset, os.SEEK_END)
+        b = f.read(1)
+        f.seek(offset, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_flipped_byte_raises_typed_datacorruption(tmp_path):
+    """The crc satellite: a single flipped payload byte — which rides
+    clean through every shape/dtype assert — must surface as the typed
+    DataCorruption at load, and on_corrupt='skip' must drop exactly the
+    damaged leaf so a replicated caller can repair it from peers."""
+    d = str(tmp_path)
+    durable.save(_tree(4), d, 1)
+    victim = os.path.join(d, "step_00000001", "params_h1.npy")
+    _flip_one_byte(victim)
+    with pytest.raises(DataCorruption, match="crc32"):
+        durable.load(d)
+    got, epoch = durable.load(d, on_corrupt="skip")
+    assert epoch == 1
+    assert "h1" not in got["params"]          # only the damaged leaf gone
+    _assert_tree_equal(got["params"]["a"], _tree(4)["params"]["a"])
+    _assert_tree_equal(got["state"], _tree(4)["state"])
+    with pytest.raises(ValueError, match="on_corrupt"):
+        durable.load(d, on_corrupt="ignore")
+
+
+def test_service_restore_read_repairs_corrupt_replica(tmp_path):
+    """A crc-corrupt replica shard leaf in the snapshot does NOT fail the
+    restore: the service rebuilds that replica from an intact snapshot
+    sibling copy (counted as a repair) and continues bit-identically."""
+    from repro.data.service import DedupService, ServiceConfig
+    docs = _job_docs(n=32, seed=21)
+    cfg = _job_cfg()
+    with MinHashDeduper(cfg) as ref:
+        ref.add_batch(docs[:16])
+        want = ref.add_batch(docs[16:])
+    svc_cfg = ServiceConfig(n_workers=4, replication=2)
+    with DedupService(cfg, svc_cfg) as svc1:
+        svc1.add_batch(docs[:16])
+        svc1.snapshot(str(tmp_path), 1)
+    # flip one byte inside replica 1 of band 0's key payload
+    victim = os.path.join(str(tmp_path), "step_00000001",
+                          "service_shards_band_0000_r1_key_bytes.npy")
+    _flip_one_byte(victim)
+    with pytest.raises(DataCorruption):        # the strict path still sees it
+        durable.load(str(tmp_path))
+    cfg2 = dataclasses.replace(cfg, seed=99)
+    with DedupService(cfg2, svc_cfg) as svc2:
+        epoch, _ = svc2.restore(str(tmp_path))
+        assert epoch == 1
+        tele = svc2.telemetry()
+        assert tele["repairs"] >= 1
+        assert tele["repair_bytes"] > 0
+        assert tele["dead_replicas"] == 0      # repaired, back in rotation
+        # the repaired copy equals the intact sibling
+        w0, w1 = svc2.replica_workers(0)
+        assert w1.shards[0] == w0.shards[0]
+        got = svc2.add_batch(docs[16:])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_service_restore_all_copies_corrupt_is_fatal(tmp_path):
+    """When EVERY replica copy of a band is damaged there is no peer to
+    repair from — restore must refuse loudly, not resurrect a hole."""
+    from repro.data.service import DedupService, ServiceConfig
+    cfg = _job_cfg()
+    svc_cfg = ServiceConfig(n_workers=4, replication=2)
+    with DedupService(cfg, svc_cfg) as svc1:
+        svc1.add_batch(_job_docs(n=16, seed=22))
+        svc1.snapshot(str(tmp_path), 1)
+    step = os.path.join(str(tmp_path), "step_00000001")
+    for j in (0, 1):
+        _flip_one_byte(os.path.join(
+            step, f"service_shards_band_0003_r{j}_key_bytes.npy"))
+    with DedupService(cfg, svc_cfg) as svc2:
+        with pytest.raises(DataCorruption, match="band 3"):
+            svc2.restore(str(tmp_path))
 
 
 # ---------------------------------------------------------------------------

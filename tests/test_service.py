@@ -1,11 +1,15 @@
 """DedupService fault envelope: retry, hedging, degradation, elasticity
 (``./test.sh --fault``).
 
-Layer map: `ShardWorker` op semantics -> the retry/hedge transport ->
-degraded mode (dead shards skip, recall bound widens, telemetry reports)
--> elastic snapshot/restore across worker counts. The reference oracle
-throughout is the in-process `MinHashDeduper`: with every shard live the
-service must be bit-identical to it, batch by batch.
+Layer map: `ShardWorker` op semantics -> the replica placement rule ->
+the retry/failover/hedge transport -> degraded mode (a band whose
+replicas are ALL dead skips, recall bound widens, telemetry reports) ->
+elastic snapshot/restore across worker counts and replication factors.
+The reference oracle throughout is the in-process `MinHashDeduper`: with
+any live replica per band the service must be bit-identical to it, batch
+by batch. Randomized fault storms live in tests/test_chaos.py
+(``./test.sh --chaos``); the single-replica degradation tests here pin
+``replication=1`` to keep exercising the last-resort path.
 """
 import dataclasses
 import types
@@ -65,6 +69,100 @@ def test_worker_scripted_failures_fire_once():
 
 
 # ---------------------------------------------------------------------------
+# replica placement + the replicated insert plane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_workers,replication",
+                         [(2, 2), (4, 2), (4, 3), (5, 3), (8, 2), (3, 5)])
+def test_replica_placement_never_colocates(n_workers, replication):
+    """replica j of band b -> worker (b + j*stride) % n_workers with
+    stride = n_workers // r: r DISTINCT workers per band (r clamped to
+    n_workers), pure function of the ids."""
+    with DedupService(_cfg(), ServiceConfig(n_workers=n_workers,
+                                            replication=replication)) as svc:
+        assert svc.r == min(replication, n_workers)
+        for b in range(svc.n_bands):
+            ids = [w.worker_id for w in svc.replica_workers(b)]
+            assert len(set(ids)) == svc.r, (b, ids)
+            assert ids[0] == svc.owner(b).worker_id
+            # every replica's worker actually owns the band's shard
+            for w in svc.replica_workers(b):
+                assert b in w.shards
+
+
+def test_inserts_fan_out_to_all_replicas():
+    """Every live replica of a band receives every insert — the copies
+    stay bit-identical, which is what makes failover lossless."""
+    docs = _docs(n=24)
+    with DedupService(_cfg(), ServiceConfig(n_workers=4)) as svc:
+        svc.add_batch(docs)
+        assert svc.t["dropped_inserts"] == 0
+        for b in range(svc.n_bands):
+            copies = [w.shards[b] for w in svc.replica_workers(b)]
+            assert copies[0]          # something was inserted
+            for c in copies[1:]:
+                assert c == copies[0]
+
+
+def test_dead_replica_inserts_queue_and_read_repair_catches_up():
+    """A dead replica's insert share goes write-behind; revive replays the
+    queue + anti-entropy diff and the copy converges bit-identically."""
+    docs = _docs(n=32)
+    with DedupService(_cfg(), ServiceConfig(n_workers=4,
+                                            backoff_base_s=0.001)) as svc:
+        svc.add_batch(docs[:16])
+        svc.kill_worker(0)
+        svc.add_batch(docs[16:])      # worker 0's replicas fall behind
+        t = svc.telemetry()
+        assert t["queued_inserts"] > 0
+        assert t["repair_queue_pairs"] > 0
+        assert t["dropped_inserts"] == 0          # replicas covered
+        assert t["recall_loss"] == 0.0            # still zero loss
+        svc.revive_worker(0)
+        t = svc.telemetry()
+        assert t["repairs"] > 0
+        assert t["repair_bytes"] > 0
+        assert t["repair_queue_pairs"] == 0
+        assert t["dead_replicas"] == 0
+        for b in range(svc.n_bands):
+            copies = [w.shards[b] for w in svc.replica_workers(b)]
+            for c in copies[1:]:
+                assert c == copies[0]
+
+
+def test_in_flight_bounded_and_surfaced():
+    """The per-worker semaphore holds a permit for the full call lifetime
+    (cancel cannot stop a running RPC); telemetry surfaces the gauge and
+    the peak, and saturation is a counted, non-fatal fast failure."""
+    with DedupService(_cfg(), ServiceConfig(n_workers=2,
+                                            max_in_flight_per_worker=2,
+                                            max_retries=0)) as svc:
+        assert svc._max_inflight == 2
+        w = svc.workers[0]
+        w.delay_s = 0.2
+        f1 = svc._submit(w, "digest", 0)
+        f2 = svc._submit(w, "digest", 0)
+        t = svc.telemetry()
+        assert t["in_flight"] == 2
+        from repro.data.service import _Saturated
+        with pytest.raises(_Saturated):
+            svc._submit(w, "digest", 0)
+        assert svc.t["saturated_rejects"] == 1
+        # saturation never strikes the replica (the worker is healthy)
+        assert svc.dead.sum() == 0
+        f1.result(timeout=5)
+        f2.result(timeout=5)
+        import time
+        for _ in range(200):          # done-callbacks may trail result()
+            if svc.telemetry()["in_flight"] == 0:
+                break
+            time.sleep(0.005)
+        t = svc.telemetry()
+        assert t["in_flight"] == 0
+        assert t["in_flight_peak"] >= 2
+
+
+# ---------------------------------------------------------------------------
 # parity with the library deduper (all shards live)
 # ---------------------------------------------------------------------------
 
@@ -115,7 +213,9 @@ def test_transient_crash_is_retried_not_degrading():
 
 
 def test_retry_exhaustion_raises_last_error():
-    svc = DedupService(_cfg(), ServiceConfig(n_workers=2, max_retries=1,
+    # replication=1: no failover target, so exhaustion must surface
+    svc = DedupService(_cfg(), ServiceConfig(n_workers=2, replication=1,
+                                             max_retries=1,
                                              backoff_base_s=0.001))
     try:
         svc.workers[0].dead = True
@@ -124,6 +224,38 @@ def test_retry_exhaustion_raises_last_error():
         assert svc.t["retries"] == 1
     finally:
         svc.close()
+
+
+def test_failover_probes_next_live_replica():
+    """With replication=2 a dead primary is NOT fatal: the retry rotates
+    to the surviving replica on a different worker and the probe succeeds
+    — zero degradation, failover counted."""
+    svc = DedupService(_cfg(), ServiceConfig(n_workers=4, max_retries=1,
+                                             backoff_base_s=0.001))
+    try:
+        primary = svc.replica_workers(0)[0]
+        primary.dead = True
+        out = svc._with_retry(0, "probe", np.zeros(2, np.uint32))
+        assert isinstance(out, list)
+        assert svc.t["failovers"] >= 1
+        assert svc.t["retry_successes"] >= 1
+    finally:
+        svc.close()
+
+
+def test_backoff_jitter_is_seeded_and_bounded():
+    """Full jitter: uniform(0, delay), deterministic per ServiceConfig
+    seed (no lockstep thundering herd, still reproducible)."""
+    with DedupService(_cfg(), ServiceConfig(seed=11)) as a, \
+         DedupService(_cfg(), ServiceConfig(seed=11)) as b, \
+         DedupService(_cfg(), ServiceConfig(seed=12)) as c:
+        ja = [a._jitter(0.01) for _ in range(8)]
+        jb = [b._jitter(0.01) for _ in range(8)]
+        jc = [c._jitter(0.01) for _ in range(8)]
+    assert ja == jb                       # seeded: reproducible
+    assert ja != jc                       # actually seed-dependent
+    assert all(0.0 <= x <= 0.01 for x in ja)
+    assert len(set(ja)) > 1               # jittered, not the old constant
 
 
 # ---------------------------------------------------------------------------
@@ -138,7 +270,8 @@ def test_dead_worker_degrades_service_with_telemetry():
     with DedupService(_cfg()) as full:
         full_flags = np.concatenate(
             [full.add_batch(docs[lo:lo + 16]) for lo in (0, 16, 32)])
-    svc = ServiceConfig(n_workers=4, max_retries=1, backoff_base_s=0.001)
+    svc = ServiceConfig(n_workers=4, replication=1, max_retries=1,
+                        backoff_base_s=0.001)
     with DedupService(_cfg(), svc) as deg:
         deg.workers[0].dead = True               # owns bands 0 and 4
         deg_flags = np.concatenate(
@@ -164,8 +297,8 @@ def test_real_timeout_marks_shard_dead_without_hanging():
     """A straggling worker that blows the RPC deadline (real wall-clock
     timeout, not a scripted exception) degrades exactly like a crash."""
     docs = _docs(n=16)
-    svc = ServiceConfig(n_workers=4, probe_timeout_s=0.05, max_retries=1,
-                        backoff_base_s=0.001)
+    svc = ServiceConfig(n_workers=4, replication=1, probe_timeout_s=0.05,
+                        max_retries=1, backoff_base_s=0.001)
     with DedupService(_cfg(), svc) as deg:
         deg.workers[1].delay_s = 0.5             # owns bands 1 and 5
         flags = deg.add_batch(docs)
@@ -243,28 +376,37 @@ def test_elastic_restore_across_worker_counts(tmp_path, w_save, w_load):
         assert epoch == 1
         got = svc2.add_batch(docs[24:])
         got_state = svc2.export_state()
+        r_load = svc2.r
         assert svc2.telemetry()["resumes"] == 1
     np.testing.assert_array_equal(got, want)
     # oracle tree: {"params", "sigs", "index"}; service: {"params", "sigs",
-    # "shards", ...} — same content, the service just renames the band plane
-    for a, b, part in ((got_state["params"], want_state["params"], "params"),
-                       (got_state["shards"], want_state["index"], "bands")):
-        for outer in a:
-            assert set(a[outer]) == set(b[outer]), (part, outer)
-            for k in a[outer]:
-                np.testing.assert_array_equal(a[outer][k], b[outer][k],
-                                              err_msg=f"{part}:{outer}:{k}")
+    # "shards", ...} — same content, the band plane keyed band_<b>_r<j>
+    # with EVERY replica copy equal to the oracle's band
+    a, b = got_state["params"], want_state["params"]
+    for outer in a:
+        assert set(a[outer]) == set(b[outer]), outer
+        for k in a[outer]:
+            np.testing.assert_array_equal(a[outer][k], b[outer][k],
+                                          err_msg=f"params:{outer}:{k}")
+    n_bands = len(want_state["index"])
+    assert len(got_state["shards"]) == n_bands * r_load
+    for outer, leaf in got_state["shards"].items():
+        oracle_band = want_state["index"][outer[:9]]   # "band_XXXX"
+        assert set(leaf) == set(oracle_band), outer
+        for k in leaf:
+            np.testing.assert_array_equal(leaf[k], oracle_band[k],
+                                          err_msg=f"bands:{outer}:{k}")
     np.testing.assert_array_equal(got_state["sigs"], want_state["sigs"])
 
 
 def test_restore_preserves_degradation_mask(tmp_path):
     with DedupService(_cfg()) as svc1:
         svc1.add_batch(_docs(n=16))
-        svc1.dead[2] = True
+        svc1.dead[2] = True          # whole row: every replica of band 2
         svc1.snapshot(str(tmp_path), 1)
     with DedupService(_cfg()) as svc2:
         svc2.restore(str(tmp_path))
-        assert bool(svc2.dead[2])
+        assert svc2.dead[2].all()
         assert svc2.telemetry()["dead_bands"] == 1
 
 

@@ -122,6 +122,29 @@ def test_checkpoint_ignores_partial_tmp(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) is None
 
 
+def test_checkpoint_restore_detects_flipped_byte(tmp_path):
+    """Per-leaf crc32: a single flipped payload byte rides clean through
+    the shape/dtype asserts but must raise the typed DataCorruption."""
+    from repro.train.fault import DataCorruption
+    state = {"w": jnp.arange(16, dtype=jnp.float32), "b": jnp.zeros(4)}
+    ckpt.save(state, str(tmp_path), 3)
+    victim = tmp_path / "step_00000003" / "w.npy"
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF                       # payload, not header
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(DataCorruption, match="crc32"):
+        ckpt.restore(state, str(tmp_path))
+    # pre-crc checkpoints (no crc32 key in meta) still load unverified
+    import json
+    meta_p = tmp_path / "step_00000003" / "meta.json"
+    meta = json.loads(meta_p.read_text())
+    for e in meta["leaves"]:
+        e.pop("crc32", None)
+    meta_p.write_text(json.dumps(meta))
+    restored, step = ckpt.restore(state, str(tmp_path))
+    assert step == 3
+
+
 def test_checkpoint_ignores_torn_meta(tmp_path):
     # rename happened but meta.json is torn/unreadable: not a restorable
     # checkpoint, latest_step must fall back to the previous good one
